@@ -1,0 +1,74 @@
+"""Kernel microbench: Pallas (interpret) correctness + jnp-ref timing.
+
+On this CPU container the Pallas interpreter is not a performance path —
+the numbers that matter are (a) allclose vs the oracle at benchmark shapes
+and (b) the jnp reference's wall time (what the selection round costs on
+the host today).  TPU timings come from running the same pallas_call
+compiled on device.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.kernels import ref
+from repro.kernels.corr import corr
+from repro.kernels.lastlayer_grad import hidden_grad_fused, lastlayer_grad
+from repro.kernels.sqdist import sqdist
+
+
+def run(quick=False):
+    n, d, v, dh = (2048, 512, 1024, 256) if quick else (8192, 1024, 4096,
+                                                        512)
+    k = jax.random.PRNGKey(0)
+    g = jax.random.normal(k, (n, d))
+    r = jax.random.normal(jax.random.fold_in(k, 1), (d,))
+    t = time_fn(jax.jit(ref.corr_ref), g, r)
+    err = float(jnp.max(jnp.abs(corr(g, r, interpret=True)
+                                - ref.corr_ref(g, r))))
+    emit("kernel", name="corr", n=n, d=d, ref_ms=round(t * 1e3, 2),
+         max_abs_err=f"{err:.2e}")
+
+    a = jax.random.normal(k, (1024, d))
+    t = time_fn(jax.jit(ref.sqdist_ref), a, a)
+    err = float(jnp.max(jnp.abs(sqdist(a, a, interpret=True)
+                                - ref.sqdist_ref(a, a))))
+    emit("kernel", name="sqdist", n=1024, d=d, ref_ms=round(t * 1e3, 2),
+         max_abs_err=f"{err:.2e}")
+
+    h = jax.random.normal(k, (n, dh))
+    z = jax.random.normal(jax.random.fold_in(k, 2), (n, 64))
+    y = jax.random.randint(jax.random.fold_in(k, 3), (n,), 0, 64)
+    t = time_fn(jax.jit(ref.lastlayer_grad_ref), h, z, y)
+    got = lastlayer_grad(h, z, y, interpret=True)
+    want = ref.lastlayer_grad_ref(h, z, y)
+    err = max(float(jnp.max(jnp.abs(a - b))) for a, b in zip(got, want))
+    emit("kernel", name="lastlayer_grad", n=n, C=64,
+         ref_ms=round(t * 1e3, 2), max_abs_err=f"{err:.2e}")
+
+    zz = jax.random.normal(jax.random.fold_in(k, 4), (256, v))
+    yy = jax.random.randint(jax.random.fold_in(k, 5), (256,), 0, v)
+    w = jax.random.normal(jax.random.fold_in(k, 6), (dh, v)) / np.sqrt(v)
+
+    def ref_hidden(zz, yy, w):
+        resid, _ = ref.lastlayer_grad_ref(jnp.zeros((zz.shape[0], 1)), zz,
+                                          yy)
+        return resid @ w.T
+
+    t = time_fn(jax.jit(ref_hidden), zz, yy, w)
+    err = float(jnp.max(jnp.abs(hidden_grad_fused(zz, yy, w,
+                                                  interpret=True)
+                                - ref_hidden(zz, yy, w))))
+    emit("kernel", name="hidden_grad_fused", n=256, V=v,
+         ref_ms=round(t * 1e3, 2), max_abs_err=f"{err:.2e}")
+
+
+def main(quick=False):
+    run(quick=quick)
+
+
+if __name__ == "__main__":
+    main()

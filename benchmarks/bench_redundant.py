@@ -1,0 +1,59 @@
+"""Paper Table 10: redundant points — examples never selected across all
+selection rounds of a training run (information redundancy of the data)."""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, paper_dataset
+from repro.configs.paper import PaperHParams, mlp
+from repro.core import selection as sel_lib
+from repro.models.classifier import init_classifier
+from repro.optim import sgd
+from repro.train.steps import make_classifier_step, make_proxy_fn
+
+
+def run(budgets=(0.05, 0.1, 0.3), epochs=30, quick=False) -> list[dict]:
+    if quick:
+        budgets, epochs = (0.1,), 12
+    train, _ = paper_dataset(n=1024)
+    model = mlp(in_dim=32, num_classes=10)
+    rows = []
+    for strategy in ("gradmatch", "gradmatch-pb", "craig-pb", "glister"):
+        for budget in budgets:
+            params = init_classifier(model, jax.random.PRNGKey(0))
+            opt = sgd(0.01, momentum=0.9)
+            step = make_classifier_step(model, opt)
+            proxy = make_proxy_fn(model)
+            opt_state = opt.init(params)
+            ever = np.zeros(train.n, bool)
+            k = int(train.n * budget)
+            for epoch in range(epochs):
+                if epoch % 5 == 0:
+                    _, bias = proxy(params, train.x, train.y)
+                    sel = sel_lib.select(strategy, jax.random.PRNGKey(epoch),
+                                         bias, k, labels=train.y,
+                                         num_classes=10, batch_size=32,
+                                         per_class=False)
+                    sel = sel_lib.expand_if_pb(strategy, sel, 32, train.n)
+                    m = np.asarray(sel.mask)
+                    ever[np.asarray(sel.indices)[m]] = True
+                # one cheap epoch on the subset keeps the model moving
+                idx = np.asarray(sel.indices)[np.asarray(sel.mask)]
+                batch = {"x": train.x[idx[:64]], "y": train.y[idx[:64]]}
+                params, opt_state, _ = step(params, opt_state, batch)
+            redundant = 100.0 * float((~ever).mean())
+            row = dict(strategy=strategy, budget=budget,
+                       redundant_pct=round(redundant, 2))
+            emit("redundant", **row)
+            rows.append(row)
+    return rows
+
+
+def main(quick=False):
+    run(quick=quick)
+
+
+if __name__ == "__main__":
+    main()

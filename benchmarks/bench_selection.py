@@ -1,0 +1,67 @@
+"""Paper Fig. 4c / App. C.4: selection cost — PB vs non-PB vs per-class.
+
+Wall-clock of one selection round as the candidate pool grows.  The PB
+variant runs OMP on an n/B ground set, so its cost curve is ~B x flatter —
+the paper's central scaling trick.  Also times the distributed
+(shard_map) OMP path on the 1-device mesh for dispatch-overhead visibility.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core import selection as sel_lib
+from repro.core.distributed import sharded_gradmatch_pb
+from repro.launch.mesh import make_host_mesh
+
+
+def run(pool_sizes=(512, 2048, 8192), d=64, budget=0.1, batch=32,
+        quick=False) -> list[dict]:
+    if quick:
+        pool_sizes = (512, 2048)
+    rows = []
+    mesh = make_host_mesh(1, 1)
+    for n in pool_sizes:
+        g = jax.random.normal(jax.random.PRNGKey(n), (n, d))
+        labels = jnp.arange(n) % 10
+        k = int(n * budget)
+        for strategy in ("gradmatch", "gradmatch-pb", "craig", "craig-pb",
+                         "glister", "random"):
+            def sel_once(g=g, strategy=strategy, k=k):
+                s = sel_lib.select(strategy, jax.random.PRNGKey(0), g, k,
+                                   labels=labels, num_classes=10,
+                                   batch_size=batch, per_class=False)
+                return s.weights
+            t = time_fn(sel_once, warmup=1, iters=3)
+            row = dict(strategy=strategy, pool=n, k=k,
+                       ms=round(t * 1e3, 2))
+            emit("selection_time", **row)
+            rows.append(row)
+        # per-class decomposition (vmapped OMP)
+        def per_class(g=g, k=k):
+            return sel_lib.select("gradmatch", jax.random.PRNGKey(0), g, k,
+                                  labels=labels, num_classes=10,
+                                  batch_size=batch, per_class=True).weights
+        t = time_fn(per_class, warmup=1, iters=3)
+        emit("selection_time", strategy="gradmatch-perclass", pool=n, k=k,
+             ms=round(t * 1e3, 2))
+        # distributed OMP (shard_map path)
+        def dist(g=g, k=k):
+            return sharded_gradmatch_pb(mesh, g, batch,
+                                        max(k // batch, 1)).weights
+        t = time_fn(dist, warmup=1, iters=3)
+        emit("selection_time", strategy="gradmatch-pb-sharded", pool=n,
+             k=k, ms=round(t * 1e3, 2))
+    return rows
+
+
+def main(quick=False):
+    run(quick=quick)
+
+
+if __name__ == "__main__":
+    main()

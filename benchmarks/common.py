@@ -1,0 +1,35 @@
+"""Shared benchmark plumbing: timing, CSV emission, standard dataset."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall seconds per call (after jit warmup)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def emit(table: str, **fields) -> None:
+    """One CSV-ish line per result: ``table,key=value,...``."""
+    print(f"{table}," + ",".join(f"{k}={v}" for k, v in fields.items()),
+          flush=True)
+
+
+def paper_dataset(n: int = 2048, dim: int = 32, num_classes: int = 10,
+                  seed: int = 0):
+    from repro.data.synthetic import make_classification, split
+    ds = make_classification(jax.random.PRNGKey(seed), n=n, dim=dim,
+                             num_classes=num_classes, sep=5.0)
+    return split(ds, jax.random.PRNGKey(seed + 1))

@@ -1,0 +1,247 @@
+"""§Perf hillclimb probes: hypothesis -> change -> re-lower -> re-analyse.
+
+Each probe compiles ONE production-module variant of a chosen cell and
+reports (flops, weighted collective bytes, memory) so the roofline terms
+before/after a change are directly comparable.  Changes are expressed as
+config/sharding overrides — model code is untouched; everything goes
+through the hint tables and builder arguments, which is the point of the
+hint system.
+
+Run:
+  PYTHONPATH=src python -m benchmarks.hillclimb --cell gemma2b_train \
+      --variant baseline|no_fsdp|...
+"""
+
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+import time
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.distributed import hints
+from repro.distributed.sharding import logical_rules, param_shardings
+from repro.launch import dryrun
+from repro.launch.hlo_analysis import (HBM_BW, ICI_BW, PEAK_FLOPS,
+                                       analytic_hbm_bytes)
+from repro.launch.mesh import make_production_mesh
+
+
+def _measure(cfg, shape, mesh, microbatches, rules=None, fsdp=True,
+             attn_dp=False, batch_overrides=None):
+    """Compile the production module with overrides; return terms."""
+    import repro.distributed.sharding as sh_mod
+    orig_build_train = dryrun.build_train
+    orig_rules = None
+    orig_param_rule = sh_mod._param_rule
+    if attn_dp:
+        # attention weights replicated (data-parallel attention): the
+        # arch's q/kv head counts don't divide the model axis, so TP
+        # attention reshards activations wholesale; attention params are
+        # tiny next to FFN, so replicating them removes the resharding
+        # at negligible memory cost.
+        def patched_param_rule(path, ndim, fsdp_arg):
+            if any(k in path for k in ("wq", "wk", "wv", "wo", "bq",
+                                       "bk", "bv", "bo")):
+                return (P(*("data", None)[:ndim]) if fsdp_arg else P())
+            return orig_param_rule(path, ndim, fsdp_arg)
+        sh_mod._param_rule = patched_param_rule
+    if rules is not None:
+        import repro.distributed.sharding as sh_mod
+        orig_rules = sh_mod.logical_rules
+
+        def patched_rules(mesh):
+            table = orig_rules(mesh)
+            table.update(rules(mesh))
+            return table
+        sh_mod.logical_rules = patched_rules
+        dryrun.logical_rules = patched_rules
+
+    def patched_build_train(cfg, shape, mesh, mb, fsdp_arg=True):
+        return orig_build_train(cfg, shape, mesh, mb, fsdp=fsdp)
+
+    dryrun.build_train = patched_build_train
+    try:
+        out = dryrun._compile_cell(cfg, shape, mesh, microbatches)
+    finally:
+        dryrun.build_train = orig_build_train
+        sh_mod._param_rule = orig_param_rule
+        if orig_rules is not None:
+            sh_mod.logical_rules = orig_rules
+            dryrun.logical_rules = orig_rules
+    ma = out["compiled"].memory_analysis()
+    coll = out["coll_weighted"]
+    return {
+        "compile_s": round(out["compile_s"], 1),
+        "coll_gib": round(coll.total_bytes / 2**30, 2),
+        "t_coll_s": round(coll.total_bytes / ICI_BW, 4),
+        "coll_counts": dict(coll.counts),
+        "peak_gib": round((max(ma.argument_size_in_bytes,
+                               ma.output_size_in_bytes)
+                           + ma.temp_size_in_bytes
+                           - ma.alias_size_in_bytes) / 2**30, 2),
+    }
+
+
+def probe(cell: str, variant: str) -> dict:
+    mesh = make_production_mesh()
+    if cell == "gemma2b_train":
+        cfg, shape, mb = get_config("gemma-2b"), SHAPES["train_4k"], 8
+        if variant == "baseline":
+            r = _measure(cfg, shape, mesh, mb)
+        elif variant == "no_fsdp":
+            # H1: FSDP re-gathers (2 x mb x params) dominate; a 2.6B model
+            # fits TP16 replicated-over-data -> collectives collapse to
+            # one grad all-reduce.
+            r = _measure(cfg, shape, mesh, mb, fsdp=False)
+        elif variant == "no_fsdp_mb1":
+            # H2: with DP weights, microbatching no longer buys collective
+            # savings; mb=1 removes the accumulation loop entirely.
+            r = _measure(cfg, shape, mesh, 1, fsdp=False)
+        elif variant == "attn_dp":
+            # H4 (H1-H3 refuted): the traffic is attention-weight-TP vs
+            # unshardeable heads (8 q / 1 kv on a 16-way axis) — GSPMD
+            # reshards the (B,S,d) stream around every attention matmul.
+            # Replicate attention weights (19 MB/layer), keep Megatron
+            # TP for the FFN (d_ff=16384 shards cleanly).
+            r = _measure(cfg, shape, mesh, mb, attn_dp=True)
+        elif variant == "attn_dp_mb2":
+            # H4 follow-up: with attention resharding gone, the residual
+            # 35 GiB is dominated by FSDP weight re-gathers (scale with
+            # microbatch count); mb=2 cuts them 4x.
+            r = _measure(cfg, shape, mesh, 2, attn_dp=True)
+        elif variant == "seqpar_mb2":
+            # H3 (after H1/H2 refuted): the traffic is attention-layout
+            # activation resharding — 8 q heads / 1 kv head cannot shard
+            # on a 16-way model axis, so GSPMD reshards the (B,S,d)
+            # stream around every attention op.  Sequence-parallel
+            # residual (S over 'model') keeps activations sharded
+            # through attention AND FFN (per-token ops); MQA KV gathers
+            # are tiny.  mb=2 for activation memory.
+            def rules(mesh):
+                return {"residual": P("data", "model", None)}
+            r = _measure(cfg, shape, mesh, 2, rules=rules)
+        else:
+            raise SystemExit(f"unknown variant {variant}")
+    elif cell == "gemma2b_prefill":
+        cfg, shape, mb = get_config("gemma-2b"), SHAPES["prefill_32k"], 1
+        if variant == "baseline":
+            r = _measure(cfg, shape, mesh, mb)
+        elif variant == "seqpar":
+            # H: MQA (kv=1) can't head-shard on a 16-way model axis; the
+            # baseline reshards activations wholesale.  Sequence-parallel
+            # residual stream (S over 'model') + per-layer KV all-gather
+            # is cheap BECAUSE MQA KV is tiny.
+            def rules(mesh):
+                return {"residual": P("data", "model", None)}
+            r = _measure(cfg, shape, mesh, mb, rules=rules)
+        elif variant == "attn_dp":
+            # same H4 as the train cell: replicated attention weights
+            r = _measure(cfg, shape, mesh, mb, attn_dp=True)
+        elif variant == "kv_hoist":
+            # H7: the baseline's 36864 all-gathers are the hd-sharded MQA
+            # KV being gathered per flash tile pair; pin K/V replicated
+            # ONCE per layer before the tile loops (MQA KV is 34 MB/chip)
+            # via the 'kv_full' hint.
+            def rules(mesh):
+                return {"kv_full": P("data", None, None, None)}
+            r = _measure(cfg, shape, mesh, mb, rules=rules)
+        elif variant == "qkv_hoist":
+            # H8: kv_hoist killed the gathers but left 18432 per-tile
+            # score all-reduces — the q head_dim is TP-sharded, so every
+            # tile einsum is a sharded contraction.  Gathering Q once per
+            # layer (1 GB/chip) is 16x cheaper than 1024 x 8.9 MB ARs.
+            def rules(mesh):
+                return {"kv_full": P("data", None, None, None),
+                        "q_full": P("data", None, None, None)}
+            r = _measure(cfg, shape, mesh, mb, rules=rules)
+        elif variant == "all_dp":
+            # H6 (H4 refuted at prefill: per-flash-tile all-reduces from
+            # the hd-sharded MQA KV remained): serving a 2.6B model needs
+            # no TP at all — replicate the whole trunk (5.3 GB params),
+            # keep only the 256k-vocab embedding/head vocab-parallel.
+            # Prefill has no gradient reduction, so DP-everything costs
+            # only the CE logit reductions.
+            import repro.distributed.sharding as sh_mod
+            orig = sh_mod._param_rule
+
+            def rules_all_dp(path, ndim, fsdp_arg):
+                if "embed" in path or "lm_head" in path or (
+                        "unit_head" in path) or "router" in path:
+                    return orig(path, ndim, False)
+                return P()
+            sh_mod._param_rule = rules_all_dp
+            try:
+                r = _measure(cfg, shape, mesh, mb)
+            finally:
+                sh_mod._param_rule = orig
+        else:
+            raise SystemExit(f"unknown variant {variant}")
+    elif cell == "qwen3_train":
+        cfg, shape = get_config("qwen3-moe-30b-a3b"), SHAPES["train_4k"]
+        if variant == "baseline":
+            r = _measure(cfg, shape, mesh, 8)
+        elif variant == "mb2":
+            # H: FSDP re-gathers scale with microbatch count; the MoE fits
+            # mb=2 activations.
+            r = _measure(cfg, shape, mesh, 2)
+        elif variant == "mb4":
+            r = _measure(cfg, shape, mesh, 4)
+        elif variant == "attn_dp_mb8":
+            # qwen3 has 32 q heads (shards 16-way) but only 4 KV heads:
+            # the GQA KV falls back to head_dim sharding and reshards —
+            # same family of pathology as gemma-2b; attention weights are
+            # ~0.6% of a 30B MoE, replicate them.
+            r = _measure(cfg, shape, mesh, 8, attn_dp=True)
+        else:
+            raise SystemExit(f"unknown variant {variant}")
+    elif cell == "xlstm_train":
+        cfg, shape = get_config("xlstm-1.3b"), SHAPES["train_4k"]
+        if variant == "baseline":
+            r = _measure(cfg, shape, mesh, 8)
+        elif variant == "state_pin":
+            # H11: the worst roofline cell (frac 0.01, t_coll 72 s) — the
+            # mLSTM per-chunk state tensors (B,NC,H,dk,dv) are resharded
+            # between the parallel-summary, cross-chunk-scan and combine
+            # phases.  Pin their layout to batch-sharded-only via the
+            # 'mlstm_chunk_state' hint.
+            def rules(mesh):
+                return {"mlstm_chunk_state": P("data")}
+            r = _measure(cfg, shape, mesh, 8, rules=rules)
+        elif variant == "qk_hoist":
+            # H12 (H11 refuted — the 206k all-reduces are per-chunk score
+            # einsums contracting the TP-sharded dk): gather q/k once per
+            # layer via 'mlstm_qk' (33 MB/chip) — the mLSTM analogue of
+            # §Perf cell 2's q_full fix; v stays dv-sharded 16-way.
+            def rules(mesh):
+                return {"mlstm_qk": P("data", None, None, None)}
+            r = _measure(cfg, shape, mesh, 8, rules=rules)
+        else:
+            raise SystemExit(f"unknown variant {variant}")
+    else:
+        raise SystemExit(f"unknown cell {cell}")
+    r.update({"cell": cell, "variant": variant})
+    return r
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True)
+    ap.add_argument("--variant", required=True)
+    ap.add_argument("--out")
+    args = ap.parse_args(argv)
+    r = probe(args.cell, args.variant)
+    print(json.dumps(r))
+    if args.out:
+        with open(args.out, "a") as f:
+            f.write(json.dumps(r) + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Benchmark orchestrator: one section per paper table/figure.
+
+``python -m benchmarks.run``           — full pass (~20-30 min on CPU)
+``python -m benchmarks.run --quick``   — reduced grid (~5 min)
+``python -m benchmarks.run --only tradeoff,kernels``
+
+Emits ``table,key=value,...`` CSV lines (tee-able) and finishes with a
+paper-claims check summary.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+SECTIONS = ("kernels", "grad_error", "selection", "tradeoff", "redundant",
+            "ablations", "roofline")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args(argv)
+    only = set(filter(None, args.only.split(",")))
+    failures = []
+
+    def section(name, fn):
+        if only and name not in only:
+            return
+        print(f"\n### bench:{name}", flush=True)
+        t0 = time.perf_counter()
+        try:
+            fn()
+            print(f"### bench:{name} done in "
+                  f"{time.perf_counter() - t0:.1f}s", flush=True)
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+
+    from benchmarks import (bench_ablations, bench_grad_error,
+                            bench_kernels, bench_redundant,
+                            bench_selection, bench_tradeoff, roofline)
+
+    section("kernels", lambda: bench_kernels.main(quick=args.quick))
+    section("grad_error", lambda: bench_grad_error.main(quick=args.quick))
+    section("selection", lambda: bench_selection.main(quick=args.quick))
+    section("tradeoff", lambda: bench_tradeoff.main(quick=args.quick))
+    section("redundant", lambda: bench_redundant.main(quick=args.quick))
+    section("ablations", lambda: bench_ablations.main(quick=args.quick))
+    section("roofline", lambda: roofline.main([]))
+
+    print(f"\nbench summary: {'FAILURES: ' + str(failures) if failures else 'all sections ok'}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,41 @@
+"""Class-imbalance robustness (paper §5, Figs. 3f/4e).
+
+30% of classes lose 90% of their examples; a clean validation set is
+available.  GRAD-MATCH with ``isValid=True`` matches the *validation*
+gradient (paper Alg. 1 line 3) and should beat both training-gradient
+matching and random — and can beat full training on the biased data.
+
+Run:  PYTHONPATH=src python examples/class_imbalance.py
+"""
+
+import jax
+
+from repro.configs.paper import PaperHParams, mlp
+from repro.data.synthetic import make_imbalanced
+from repro.train.trainer import AdaptiveTrainer, TrainerConfig
+
+
+def main():
+    train, val = make_imbalanced(jax.random.PRNGKey(5), n=4096, dim=32,
+                                 num_classes=10, imbalanced_frac=0.3,
+                                 keep_frac=0.1, sep=5.0)
+    print(f"imbalanced train n={train.n}, clean val n={val.n}")
+    model = mlp(in_dim=32, num_classes=10)
+    hp = PaperHParams(select_every=10)
+
+    runs = [
+        ("full (biased data)", "full", False, 1.0),
+        ("random 30%", "random", False, 0.3),
+        ("gradmatch 30% (train-grad)", "gradmatch", False, 0.3),
+        ("gradmatch 30% (VAL-grad)", "gradmatch", True, 0.3),
+    ]
+    print(f"{'run':32s} {'acc':>7} {'work':>10}")
+    for name, strategy, is_valid, budget in runs:
+        tc = TrainerConfig(strategy=strategy, budget=budget, epochs=40,
+                           batch_size=64, is_valid=is_valid, hp=hp)
+        rep = AdaptiveTrainer(model, tc, train, val).run()
+        print(f"{name:32s} {rep.final_acc:7.3f} {rep.work_units:10.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""End-to-end paper reproduction driver (Fig. 3-style sweep, CPU scale).
+
+Runs the strategy grid at several budgets with the paper's hyper-params
+(R=20 scaled to the shorter schedule, lambda=0.5, kappa=1/2, SGD m=0.9
+wd=5e-4 cosine) and prints the speedup-vs-relative-error scatter the paper
+plots, plus the Wilcoxon-flavored pairwise win table.
+
+Run:  PYTHONPATH=src python examples/paper_repro.py [--epochs 60]
+"""
+
+import argparse
+
+import jax
+
+from repro.configs.paper import PaperHParams, mlp
+from repro.data.synthetic import make_classification, split
+from repro.train.trainer import AdaptiveTrainer, TrainerConfig
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--epochs", type=int, default=40)
+    ap.add_argument("--n", type=int, default=2048)
+    ap.add_argument("--budgets", default="0.1,0.3")
+    args = ap.parse_args(argv)
+    budgets = [float(b) for b in args.budgets.split(",")]
+
+    ds = make_classification(jax.random.PRNGKey(0), n=args.n, dim=32,
+                             num_classes=10, sep=5.0)
+    train, val = split(ds, jax.random.PRNGKey(1))
+    model = mlp(in_dim=32, num_classes=10)
+    hp = PaperHParams(select_every=10)
+
+    full = AdaptiveTrainer(model, TrainerConfig(
+        strategy="full", budget=1.0, epochs=args.epochs, batch_size=64,
+        hp=hp), train, val).run()
+    print(f"{'strategy':22s} {'budget':>6} {'acc':>7} {'rel_err%':>9} "
+          f"{'speedup':>8}")
+    print(f"{'full':22s} {'100%':>6} {full.final_acc:7.3f} {0.0:9.2f} "
+          f"{1.0:8.2f}")
+
+    rows = []
+    for budget in budgets:
+        grid = [("random", False), ("glister", False), ("craig-pb", False),
+                ("gradmatch", False), ("gradmatch-pb", False),
+                ("gradmatch-pb", True)]
+        for strategy, warm in grid:
+            tc = TrainerConfig(strategy=strategy, budget=budget,
+                               epochs=args.epochs, batch_size=64,
+                               warm_start=warm, hp=hp)
+            rep = AdaptiveTrainer(model, tc, train, val).run()
+            speed = full.work_units / rep.work_units
+            rel = (full.final_acc - rep.final_acc) * 100
+            print(f"{rep.strategy:22s} {budget:6.0%} "
+                  f"{rep.final_acc:7.3f} {rel:9.2f} {speed:8.2f}")
+            rows.append((rep.strategy, budget, rep.final_acc))
+
+    # pairwise wins (gradmatch variants vs baselines across budgets)
+    gm = [a for s, _, a in rows if s.startswith("gradmatch")]
+    base = [a for s, _, a in rows if not s.startswith("gradmatch")]
+    if gm and base:
+        wins = sum(1 for g in gm for b in base if g >= b)
+        print(f"\ngradmatch-vs-baseline wins: {wins}/{len(gm) * len(base)}")
+
+
+if __name__ == "__main__":
+    main()

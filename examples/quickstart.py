@@ -1,0 +1,69 @@
+"""Quickstart: GRAD-MATCH in 60 seconds.
+
+Selects a weighted coreset of a synthetic classification set with OMP,
+shows the gradient-matching error against random selection, then trains
+on the subset.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.paper import PaperHParams, mlp
+from repro.core.gradmatch import gradmatch
+from repro.core.omp import matching_error
+from repro.core.random_sel import random_select
+from repro.data.synthetic import make_classification, split
+from repro.train.trainer import AdaptiveTrainer, TrainerConfig
+
+
+def main():
+    # 1) data + a gradient-proxy matrix (here: raw features x residual
+    #    direction stand-in — the trainer uses real last-layer gradients)
+    ds = make_classification(jax.random.PRNGKey(0), n=2048, dim=32,
+                             num_classes=10)
+    train, val = split(ds, jax.random.PRNGKey(1))
+
+    # 2) one OMP selection round on explicit gradient proxies
+    g = train.x / jnp.linalg.norm(train.x, axis=1, keepdims=True)
+    target = jnp.sum(g, axis=0)
+    k = 128
+    sel = gradmatch(g, k=k, lam=0.5)
+    n = train.n
+
+    def rel_err(s):
+        """Error at the optimal scalar rescale (weights are normalized to
+        sum 1; training renormalizes per batch, so direction is what
+        matters)."""
+        approx = jnp.sum(jnp.where(s.mask, s.weights, 0.0)[:, None]
+                         * g[jnp.where(s.mask, s.indices, 0)], axis=0)
+        scale = jnp.sum(approx * target) / jnp.maximum(
+            jnp.sum(approx * approx), 1e-12)
+        return float(jnp.linalg.norm(scale * approx - target)
+                     / jnp.linalg.norm(target))
+
+    e_gm = rel_err(sel)
+    rnd = random_select(jax.random.PRNGKey(2), n, k)
+    e_rnd = rel_err(rnd)
+    print(f"selected {int(sel.mask.sum())}/{n} examples | rel matching "
+          f"error: gradmatch {e_gm:.3f} vs random {e_rnd:.3f}")
+
+    # 3) adaptive training on GRAD-MATCHPB subsets (paper Alg. 1)
+    tc = TrainerConfig(strategy="gradmatch-pb", budget=0.15, epochs=30,
+                       batch_size=64, hp=PaperHParams(select_every=10))
+    rep = AdaptiveTrainer(mlp(in_dim=32, num_classes=10), tc, train,
+                          val).run()
+    tc_r = TrainerConfig(strategy="random", budget=0.15, epochs=30,
+                         batch_size=64, hp=PaperHParams(select_every=10))
+    rep_r = AdaptiveTrainer(mlp(in_dim=32, num_classes=10), tc_r, train,
+                            val).run()
+    print(f"GRAD-MATCHPB: acc={rep.final_acc:.3f}  "
+          f"work={rep.work_units:.0f} (sel {rep.selection_seconds:.1f}s)")
+    print(f"RANDOM      : acc={rep_r.final_acc:.3f}  "
+          f"work={rep_r.work_units:.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Batched serving example: prefill + decode with KV caches.
+
+Runs a smoke-reduced assigned architecture through launch/serve.py —
+a queue of synthetic prompts, admission in fixed batches, greedy decode
+against the cache (the same step functions the multi-pod dry-run lowers
+at full scale).
+
+Run:  PYTHONPATH=src python examples/serve_decode.py [--arch zamba2-7b]
+"""
+
+import argparse
+
+from repro.launch import serve as serve_driver
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="zamba2-7b")
+    args = ap.parse_args(argv)
+    for arch in [args.arch]:
+        # prompt length divisible by the smoke configs' SSD/mLSTM chunk
+        serve_driver.main(["--arch", arch, "--smoke", "--requests", "8",
+                           "--batch", "4", "--prompt-len", "32",
+                           "--gen-len", "12"])
+
+
+if __name__ == "__main__":
+    main()

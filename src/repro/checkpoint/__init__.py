@@ -1,0 +1,9 @@
+from repro.checkpoint.checkpoint import (CheckpointManager, load_checkpoint,
+                                         restore_sharded, save_checkpoint)
+
+__all__ = [
+    "CheckpointManager",
+    "load_checkpoint",
+    "restore_sharded",
+    "save_checkpoint",
+]

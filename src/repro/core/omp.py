@@ -1,0 +1,185 @@
+"""Orthogonal Matching Pursuit (Algorithm 2 of the paper), TPU-native.
+
+The paper minimizes, over subsets ``X`` (|X| <= k) and non-negative weights
+``w``::
+
+    Err_lambda(w, X) = || sum_{i in X} w_i g_i  -  g_tgt ||^2 + lambda ||w||^2
+
+where ``g_i`` are candidate gradients (rows of ``G``, shape (n, d)) and
+``g_tgt`` is the full training-set or validation-set gradient.  OMP greedily
+adds the candidate with the largest |residual correlation| and re-solves the
+(regularized, non-negative) least squares on the active set.
+
+Hardware adaptation (see DESIGN.md S3): the reference implementation in CORDS
+uses dynamic Python lists + scipy NNLS on CPU.  Here the whole solver is a
+fixed-iteration ``lax.fori_loop`` with a *padded* active set of static size k,
+so it jits, vmaps (per-class decomposition = leading batch axis) and runs
+sharded on a pod without host round-trips.
+
+Weights are solved by projected-gradient non-negative ridge regression on the
+active set -- a small (k x k) problem solved in VMEM-resident registers.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+class OMPState(NamedTuple):
+    """Carry for the OMP loop (all static shapes)."""
+
+    indices: jax.Array   # (k,) int32, selected candidate ids, -1 = unused slot
+    mask: jax.Array      # (k,) bool, slot valid
+    weights: jax.Array   # (k,) f32, non-negative weights for active slots
+    residual: jax.Array  # (d,) f32, g_tgt - G_S^T w
+    err: jax.Array       # () f32, current ||residual||^2 + lam*||w||^2
+
+
+def _nnls_active(
+    gram: jax.Array,      # (k, k) = G_S G_S^T  (masked rows/cols zeroed)
+    corr: jax.Array,      # (k,)   = G_S g_tgt
+    mask: jax.Array,      # (k,) bool
+    lam: float,
+    n_iters: int,
+) -> jax.Array:
+    """Non-negative ridge LS on the (masked) active set via projected gradient.
+
+    Solves  min_{w>=0} 0.5 w^T (A + lam I) w - c^T w  restricted to mask.
+    Lipschitz step 1/L with L = trace upper bound; fixed iterations keep the
+    whole thing jittable.  k is small (<= few hundred) so this is negligible
+    next to the correlation scan over n candidates.
+    """
+    k = gram.shape[0]
+    a = gram + lam * jnp.eye(k, dtype=gram.dtype)
+    # Zero out inactive rows/cols so they stay at w=0.
+    m = mask.astype(gram.dtype)
+    a = a * m[:, None] * m[None, :]
+    c = corr * m
+    # Lipschitz bound: row-sum (Gershgorin) of |A|, floored for stability.
+    lip = jnp.maximum(jnp.max(jnp.sum(jnp.abs(a), axis=1)), 1e-6)
+    step = 1.0 / lip
+
+    def body(_, w):
+        grad = a @ w - c
+        w = jnp.maximum(w - step * grad, 0.0)
+        return w * m
+
+    w0 = jnp.zeros((k,), dtype=gram.dtype)
+    return lax.fori_loop(0, n_iters, body, w0)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "nnls_iters", "positive", "corr_fn")
+)
+def omp_select(
+    grads: jax.Array,          # (n, d) candidate gradients (rows)
+    target: jax.Array,         # (d,)   target gradient (full train or val)
+    k: int,
+    lam: float = 0.5,
+    eps: float = 1e-10,
+    nnls_iters: int = 50,
+    positive: bool = True,
+    valid: jax.Array | None = None,   # (n,) bool — candidate availability
+    corr_fn=None,              # optional kernel: (G, r) -> (n,) scores
+):
+    """Run OMP for exactly ``k`` rounds (slots beyond the eps-stop get masked).
+
+    Returns (indices (k,), weights (k,), mask (k,), err ()).  Indices of
+    unused slots are -1 and their weights 0, so downstream consumers can use
+    the padded arrays directly (static shapes for jit).
+    """
+    n, d = grads.shape
+    grads = grads.astype(jnp.float32)
+    target = target.astype(jnp.float32)
+    if valid is None:
+        valid = jnp.ones((n,), dtype=bool)
+
+    neg_inf = jnp.float32(-jnp.inf)
+
+    def correlate(residual):
+        if corr_fn is not None:
+            return corr_fn(grads, residual)
+        return grads @ residual
+
+    def body(t, state: OMPState):
+        # 1) residual correlations;  already-selected / invalid candidates out.
+        scores = correlate(state.residual)
+        if positive:
+            scores_sel = scores          # match direction of the target
+        else:
+            scores_sel = jnp.abs(scores)
+        taken = jnp.zeros((n,), dtype=bool).at[
+            jnp.where(state.mask, state.indices, n - 1)
+        ].set(state.mask, mode="drop")
+        scores_sel = jnp.where(valid & ~taken, scores_sel, neg_inf)
+        e = jnp.argmax(scores_sel).astype(jnp.int32)
+
+        # stop criterion E_lambda <= eps  -> do not grow the active set.
+        grow = state.err > eps
+        new_indices = state.indices.at[t].set(jnp.where(grow, e, -1))
+        new_mask = state.mask.at[t].set(grow)
+
+        # 2) re-solve non-negative ridge LS on the active set.
+        sel = jnp.where(new_mask, new_indices, 0)
+        g_s = grads[sel] * new_mask[:, None].astype(grads.dtype)  # (k, d)
+        gram = g_s @ g_s.T
+        corr = g_s @ target
+        w = _nnls_active(gram, corr, new_mask, lam, nnls_iters)
+
+        # 3) residual + error refresh.
+        approx = w @ g_s
+        residual = target - approx
+        err = jnp.sum(residual**2) + lam * jnp.sum(w**2)
+        return OMPState(new_indices, new_mask, w, residual, err)
+
+    init = OMPState(
+        indices=jnp.full((k,), -1, dtype=jnp.int32),
+        mask=jnp.zeros((k,), dtype=bool),
+        weights=jnp.zeros((k,), dtype=jnp.float32),
+        residual=target,
+        err=jnp.sum(target**2) + jnp.float32(0.0),
+    )
+    out = lax.fori_loop(0, k, body, init)
+    return out.indices, out.weights, out.mask, out.err
+
+
+def omp_select_per_class(
+    grads: jax.Array,        # (n, d)
+    labels: jax.Array,       # (n,) int class ids
+    targets: jax.Array,      # (num_classes, d) per-class target gradients
+    num_classes: int,
+    k_per_class: int,
+    lam: float = 0.5,
+    eps: float = 1e-10,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Paper's per-class decomposition, batched over classes with vmap.
+
+    Each class-c problem only sees candidates with label c (others masked
+    invalid).  Returns flattened (num_classes*k, ...) padded arrays.
+    """
+
+    def one_class(c, target):
+        valid = labels == c
+        idx, w, mask, _ = omp_select(
+            grads, target, k=k_per_class, lam=lam, eps=eps, valid=valid
+        )
+        return idx, w, mask
+
+    idx, w, mask = jax.vmap(one_class)(jnp.arange(num_classes), targets)
+    return idx.reshape(-1), w.reshape(-1), mask.reshape(-1)
+
+
+def matching_error(
+    grads: jax.Array, target: jax.Array, indices: jax.Array,
+    weights: jax.Array, mask: jax.Array, lam: float = 0.0,
+) -> jax.Array:
+    """Err_lambda for a given (X, w) — used by tests & benchmarks."""
+    sel = jnp.where(mask, indices, 0)
+    g_s = grads[sel] * mask[:, None].astype(grads.dtype)
+    resid = target - weights @ g_s
+    return jnp.sqrt(jnp.sum(resid**2)) + lam * jnp.sum(weights**2)

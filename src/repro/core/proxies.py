@@ -1,0 +1,108 @@
+"""Last-layer gradient proxies (paper S4, 'last-layer' + 'per-gradient').
+
+For a cross-entropy head ``z = H W + b`` the per-sample gradients are closed
+form (no backprop through the trunk needed):
+
+    dL_i/db   = p_i - y_i                      (num_classes,)
+    dL_i/dW   = h_i (p_i - y_i)^T              (d_h, num_classes)
+    dL_i/dh_i = W (p_i - y_i)                  (d_h,)   -- 'hidden grad'
+
+The paper's GRAD-MATCH uses the last linear layer's gradients; its
+*per-gradient* approximation keeps only the slice for the sample's own class.
+For LM heads (vocab up to 256k) even the bias gradient is large, so we provide
+a fixed-seed random projection (Johnson-Lindenstrauss: preserves the inner
+products OMP relies on) and the hidden-gradient proxy (dimension d_model).
+
+All functions work on examples; per-batch (PB) proxies are means over the
+batch axis, computed by the fused Pallas kernel in kernels/lastlayer_grad.py
+when n is large (see kernels/ops.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def softmax_residual(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """(p - onehot(y)) per sample/token.  logits (..., C), labels (...,)."""
+    p = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    y = jax.nn.one_hot(labels, logits.shape[-1], dtype=p.dtype)
+    return p - y
+
+
+def bias_grad_proxy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Per-sample last-layer *bias* gradient: (n, C)."""
+    return softmax_residual(logits, labels)
+
+
+def last_layer_grad_proxy(
+    hidden: jax.Array,    # (n, d_h)
+    logits: jax.Array,    # (n, C)
+    labels: jax.Array,    # (n,)
+    concat_bias: bool = True,
+) -> jax.Array:
+    """Full last-layer gradient, flattened: (n, d_h*C [+ C]).
+
+    This is the exact per-sample gradient of the CE loss w.r.t. (W, b) of the
+    final linear layer -- what non-per-class GRAD-MATCH matches.
+    Only use for small C (paper: CIFAR/MNIST heads).
+    """
+    resid = softmax_residual(logits, labels)                 # (n, C)
+    outer = hidden[:, :, None] * resid[:, None, :]           # (n, d_h, C)
+    flat = outer.reshape(outer.shape[0], -1)
+    if concat_bias:
+        flat = jnp.concatenate([flat, resid], axis=-1)
+    return flat
+
+
+def per_class_grad_proxy(
+    hidden: jax.Array, logits: jax.Array, labels: jax.Array
+) -> jax.Array:
+    """Paper's per-class *per-gradient* approximation: (n, d_h + 1).
+
+    For sample i of class c keep only row c of dW plus the class bias term:
+    g_i = [ (p_ic - 1) * h_i ,  p_ic - 1 ].  Used with per-class OMP where all
+    candidates share the class, so rows are comparable.
+    """
+    resid = softmax_residual(logits, labels)                 # (n, C)
+    own = jnp.take_along_axis(resid, labels[:, None], axis=-1)  # (n, 1)
+    return jnp.concatenate([own * hidden, own], axis=-1)
+
+
+def hidden_grad_proxy(
+    hidden: jax.Array,     # (..., d_h) final pre-head hidden states
+    logits: jax.Array,     # (..., V)
+    labels: jax.Array,     # (...,)
+    unembed: jax.Array,    # (d_h, V) head weight
+) -> jax.Array:
+    """dL/dh = (p - y) @ W^T : the LM-friendly proxy, dimension d_model.
+
+    Exact head-input gradient; one extra (.., V) x (V, d_h) matmul.  For LM
+    candidates = micro-batches, call with (B, T, ...) and mean over T.
+    """
+    resid = softmax_residual(logits, labels)
+    del hidden  # only needed by callers that concat features; kept for API
+    return resid @ unembed.T.astype(resid.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("out_dim",))
+def random_project(x: jax.Array, out_dim: int, seed: int = 0) -> jax.Array:
+    """Fixed-seed JL projection (n, D) -> (n, out_dim), D large (e.g. vocab)."""
+    key = jax.random.PRNGKey(seed)
+    proj = jax.random.normal(key, (x.shape[-1], out_dim), dtype=jnp.float32)
+    return (x.astype(jnp.float32) @ proj) / jnp.sqrt(jnp.float32(out_dim))
+
+
+def per_batch(proxies: jax.Array, batch_size: int) -> jax.Array:
+    """Group per-example proxies into per-mini-batch (PB) proxies.
+
+    (n, d) -> (n // B, d); each row is the *mean* gradient of one mini-batch,
+    i.e. exactly the gradient used by a weighted mini-batch SGD step.  n must
+    be divisible by B (the loader pads the candidate pool).
+    """
+    n, d = proxies.shape
+    nb = n // batch_size
+    return proxies[: nb * batch_size].reshape(nb, batch_size, d).mean(axis=1)

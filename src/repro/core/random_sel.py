@@ -1,0 +1,23 @@
+"""RANDOM baseline: uniform subset, uniform weights (paper's skyline-for-time)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gradmatch import SelectionResult
+
+
+def random_select(key: jax.Array, n: int, k: int,
+                  valid: jax.Array | None = None) -> SelectionResult:
+    if valid is None:
+        perm = jax.random.permutation(key, n)[:k]
+    else:
+        # Gumbel top-k over valid candidates — jit-safe weighted sampling
+        # without replacement.
+        g = jax.random.gumbel(key, (n,))
+        g = jnp.where(valid, g, -jnp.inf)
+        perm = jax.lax.top_k(g, k)[1]
+    mask = jnp.ones((k,), dtype=bool)
+    w = jnp.full((k,), 1.0 / k, dtype=jnp.float32)
+    return SelectionResult(perm.astype(jnp.int32), w, mask, jnp.float32(0.0))

@@ -1,0 +1,108 @@
+"""Strategy dispatch + adaptive-selection schedule (paper Algorithm 1).
+
+``select()`` maps a strategy name to its selector over a proxy matrix —
+the one place the trainer, benchmarks and examples resolve
+GRAD-MATCH / CRAIG / GLISTER / RANDOM and their PB variants.
+
+``warm_start_epochs()`` implements the paper's warm-start budget split
+(§4): run ``T_f = kappa * T * (k/n)`` epochs of full-data training, then
+``T_s = kappa * T`` epochs of subset training — at kappa = 1/2 the total
+compute equals the non-warm schedule's (the paper's "50% warm-start / 50%
+data selection").
+
+``SelectionSchedule`` answers "is epoch t a selection epoch?" (every R
+epochs, and always at the first subset epoch).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import craig as craig_lib
+from repro.core import glister as glister_lib
+from repro.core import gradmatch as gm_lib
+from repro.core import proxies as proxy_lib
+from repro.core import random_sel
+from repro.core.gradmatch import SelectionResult
+
+STRATEGIES = ("gradmatch", "gradmatch-pb", "craig", "craig-pb", "glister",
+              "random", "full")
+
+
+def select(
+    strategy: str,
+    key: jax.Array,
+    proxies: jax.Array,            # (n, d) per-example gradient proxies
+    k: int,
+    labels: Optional[jax.Array] = None,
+    num_classes: int = 0,
+    batch_size: int = 32,
+    lam: float = 0.5,
+    eps: float = 1e-10,
+    val_target: Optional[jax.Array] = None,   # (d,) validation-gradient sum
+    per_class: bool = True,
+) -> SelectionResult:
+    """Resolve one selection round.  ``val_target`` switches isValid=True.
+
+    PB variants interpret ``k`` as an example budget and convert it to
+    ``k // batch_size`` mini-batches; their result indexes *batches* — use
+    ``gm_lib.expand_batch_selection`` to map back to examples.
+    """
+    n = proxies.shape[0]
+    if strategy == "full":
+        w = jnp.full((n,), 1.0 / n, jnp.float32)
+        return SelectionResult(jnp.arange(n, dtype=jnp.int32), w,
+                               jnp.ones((n,), bool), jnp.float32(0.0))
+    if strategy == "random":
+        return random_sel.random_select(key, n, k)
+    if strategy == "gradmatch":
+        if per_class and labels is not None and num_classes > 1 and (
+                val_target is None):
+            return gm_lib.gradmatch_per_class(
+                proxies, labels, num_classes, k, lam=lam, eps=eps)
+        return gm_lib.gradmatch(proxies, k, target=val_target, lam=lam,
+                                eps=eps)
+    if strategy == "gradmatch-pb":
+        return gm_lib.gradmatch_pb(
+            proxies, batch_size, max(k // batch_size, 1), lam=lam, eps=eps,
+            target=val_target)
+    if strategy == "craig":
+        return craig_lib.craig(proxies, k)
+    if strategy == "craig-pb":
+        return craig_lib.craig_pb(proxies, batch_size,
+                                  max(k // batch_size, 1))
+    if strategy == "glister":
+        tgt = val_target if val_target is not None else jnp.sum(proxies, 0)
+        return glister_lib.glister(proxies, tgt, k)
+    raise ValueError(f"unknown strategy {strategy!r}; known: {STRATEGIES}")
+
+
+def expand_if_pb(strategy: str, sel: SelectionResult, batch_size: int,
+                 n_examples: int) -> SelectionResult:
+    if strategy.endswith("-pb"):
+        return gm_lib.expand_batch_selection(sel, batch_size, n_examples)
+    return sel
+
+
+def warm_start_epochs(total_epochs: int, budget_frac: float,
+                      kappa: float = 0.5) -> tuple[int, int]:
+    """(T_f full-data epochs, T_s subset epochs) per the paper's split."""
+    t_s = max(int(round(kappa * total_epochs)), 1)
+    t_f = int(round(t_s * budget_frac))
+    return t_f, t_s
+
+
+@dataclass(frozen=True)
+class SelectionSchedule:
+    select_every: int = 20         # R
+    warm_epochs: int = 0           # T_f
+
+    def is_selection_epoch(self, epoch: int) -> bool:
+        """Selection at the first post-warm epoch, then every R."""
+        if epoch < self.warm_epochs:
+            return False
+        return (epoch - self.warm_epochs) % self.select_every == 0

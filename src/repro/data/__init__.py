@@ -1,0 +1,28 @@
+"""Deterministic synthetic data substrate (no datasets ship offline).
+
+Two families:
+
+  - ``synthetic``: structured gaussian-mixture classification with optional
+    class imbalance (the paper's MNIST/CIFAR stand-in — what matters to
+    GRAD-MATCH is class structure in gradient space, which mixtures provide).
+  - ``tokens``: a Zipf-distributed, Markov-structured LM token stream,
+    *stateless-indexed*: batch ``i`` of shard ``s`` is a pure function of
+    ``(seed, i, s)``, so the pipeline is sharded and restartable by
+    construction (checkpoint = one integer).
+
+``loader.SubsetLoader`` serves weighted mini-batches from a selected subset
+(X^t, w^t) with checkpointable iteration state.
+"""
+
+from repro.data.loader import LoaderState, SubsetLoader
+from repro.data.synthetic import make_classification, make_imbalanced
+from repro.data.tokens import TokenStream, token_batch
+
+__all__ = [
+    "LoaderState",
+    "SubsetLoader",
+    "TokenStream",
+    "make_classification",
+    "make_imbalanced",
+    "token_batch",
+]

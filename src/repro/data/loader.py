@@ -1,0 +1,113 @@
+"""Weighted-subset mini-batch loader (Algorithm 1 line 9 feeding).
+
+Serves shuffled mini-batches drawn from the current selection
+``(indices, weights)`` over a host-resident dataset.  Iteration state
+(epoch, cursor, rng key) is an explicit NamedTuple so checkpoints capture
+the exact mid-epoch position — restart is bit-exact.
+
+Weights: per the theory (Thm 1 normalization), selection weights sum to 1
+over the subset.  A mini-batch of size B re-normalizes its slice to sum to
+1 so every SGD step sees the same objective scale regardless of which slice
+of the subset it drew (the trainer multiplies by nothing further).
+"""
+
+from __future__ import annotations
+
+from typing import Iterator, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class LoaderState(NamedTuple):
+    epoch: jax.Array     # () int32
+    cursor: jax.Array    # () int32 — position within the current permutation
+    key: jax.Array       # PRNG key for the *next* permutation
+
+
+class SubsetLoader:
+    """Mini-batches over the selected subset with weights.
+
+    The selection is padded/masked (static shapes); invalid slots are
+    filtered host-side once per ``set_selection`` — selection cadence is
+    every R epochs, so this never touches the step path.
+    """
+
+    def __init__(self, x: jax.Array, y: jax.Array, batch_size: int,
+                 seed: int = 0):
+        self.x = x
+        self.y = y
+        self.batch_size = batch_size
+        self._sel_idx = np.arange(x.shape[0])
+        self._sel_w = np.full((x.shape[0],), 1.0 / x.shape[0], np.float32)
+        self.state = LoaderState(jnp.int32(0), jnp.int32(0),
+                                 jax.random.PRNGKey(seed))
+
+    # -- selection plumbing --------------------------------------------------
+    def set_selection(self, indices, weights, mask) -> None:
+        idx = np.asarray(indices)
+        w = np.asarray(weights, np.float32)
+        m = np.asarray(mask, bool) & (idx >= 0)
+        self._sel_idx = idx[m]
+        self._sel_w = w[m]
+        s = self._sel_w.sum()
+        self._sel_w = (self._sel_w / s if s > 0 else
+                       np.full_like(self._sel_w, 1.0 / max(len(self._sel_w),
+                                                           1)))
+
+    @property
+    def subset_size(self) -> int:
+        return len(self._sel_idx)
+
+    def steps_per_epoch(self) -> int:
+        return max(self.subset_size // self.batch_size, 1)
+
+    # -- iteration -----------------------------------------------------------
+    def _perm(self, key: jax.Array) -> np.ndarray:
+        return np.asarray(jax.random.permutation(key, self.subset_size))
+
+    def next_batch(self) -> dict:
+        """One weighted mini-batch; advances (and wraps) the state."""
+        n = self.subset_size
+        bs = min(self.batch_size, n)
+        cur = int(self.state.cursor)
+        perm = self._perm(self.state.key)
+        if cur + bs > n:  # wrap: new epoch, fresh permutation
+            key = jax.random.fold_in(self.state.key, 1)
+            self.state = LoaderState(self.state.epoch + 1, jnp.int32(0), key)
+            perm = self._perm(key)
+            cur = 0
+        take = perm[cur: cur + bs]
+        self.state = LoaderState(self.state.epoch,
+                                 jnp.int32(cur + bs), self.state.key)
+        rows = self._sel_idx[take]
+        w = self._sel_w[take]
+        s = w.sum()
+        w = w / s if s > 0 else np.full_like(w, 1.0 / bs)
+        return {
+            "x": self.x[rows],
+            "y": self.y[rows],
+            "weights": jnp.asarray(w),
+        }
+
+    def epoch_batches(self) -> Iterator[dict]:
+        for _ in range(self.steps_per_epoch()):
+            yield self.next_batch()
+
+    # -- checkpointing ---------------------------------------------------------
+    def checkpoint_state(self) -> dict:
+        return {
+            "epoch": np.asarray(self.state.epoch),
+            "cursor": np.asarray(self.state.cursor),
+            "key": np.asarray(self.state.key),
+            "sel_idx": self._sel_idx,
+            "sel_w": self._sel_w,
+        }
+
+    def restore_state(self, st: dict) -> None:
+        self.state = LoaderState(jnp.int32(st["epoch"]),
+                                 jnp.int32(st["cursor"]),
+                                 jnp.asarray(st["key"], jnp.uint32))
+        self._sel_idx = np.asarray(st["sel_idx"])
+        self._sel_w = np.asarray(st["sel_w"], np.float32)

@@ -1,0 +1,89 @@
+"""Structured synthetic classification data (gaussian mixtures).
+
+Each class is a mixture of ``modes_per_class`` gaussians in ``dim``
+dimensions with means drawn on a sphere of radius ``sep`` — controllably
+(non-)separable and, crucially for this paper, with *class-clustered
+gradients*: per-example last-layer gradients of examples in the same class
+cluster in gradient space exactly the way CIFAR classes do, which is the
+structure GRAD-MATCH / CRAIG exploit.
+
+``make_imbalanced`` replicates the paper's robustness protocol (§5): drop
+90% of the examples from 30% of the classes; a clean balanced validation set
+is returned for the ``isValid=True`` (validation-gradient-matching) runs.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Dataset(NamedTuple):
+    x: jax.Array          # (n, dim) f32
+    y: jax.Array          # (n,) int32
+    num_classes: int
+
+    @property
+    def n(self) -> int:
+        return self.x.shape[0]
+
+
+def make_classification(
+    key: jax.Array,
+    n: int = 4096,
+    dim: int = 64,
+    num_classes: int = 10,
+    modes_per_class: int = 3,
+    sep: float = 4.0,
+    noise: float = 1.0,
+) -> Dataset:
+    kmu, kmode, kx, ky = jax.random.split(key, 4)
+    means = sep * jax.random.normal(
+        kmu, (num_classes, modes_per_class, dim)) / jnp.sqrt(dim)
+    y = jax.random.randint(ky, (n,), 0, num_classes)
+    mode = jax.random.randint(kmode, (n,), 0, modes_per_class)
+    mu = means[y, mode]                                   # (n, dim)
+    x = mu + noise * jax.random.normal(kx, (n, dim))
+    return Dataset(x.astype(jnp.float32), y.astype(jnp.int32), num_classes)
+
+
+def split(ds: Dataset, key: jax.Array, val_frac: float = 0.1
+          ) -> tuple[Dataset, Dataset]:
+    """Deterministic shuffled train/val split (the paper's 90/10)."""
+    perm = jax.random.permutation(key, ds.n)
+    n_val = int(ds.n * val_frac)
+    vi, ti = perm[:n_val], perm[n_val:]
+    return (Dataset(ds.x[ti], ds.y[ti], ds.num_classes),
+            Dataset(ds.x[vi], ds.y[vi], ds.num_classes))
+
+
+def make_imbalanced(
+    key: jax.Array,
+    n: int = 4096,
+    dim: int = 64,
+    num_classes: int = 10,
+    imbalanced_frac: float = 0.3,
+    keep_frac: float = 0.1,
+    **kw,
+) -> tuple[Dataset, Dataset]:
+    """Paper §5 class-imbalance protocol.
+
+    Returns (imbalanced_train, clean_val).  ``imbalanced_frac`` of the
+    classes keep only ``keep_frac`` of their examples (paper: 30% of classes
+    reduced by 90%).  The validation set stays balanced/clean.
+    """
+    kd, ks, kr = jax.random.split(key, 3)
+    full = make_classification(kd, n=n, dim=dim, num_classes=num_classes,
+                               **kw)
+    train, val = split(full, ks)
+    n_imb = int(num_classes * imbalanced_frac)
+    imb_classes = jnp.arange(n_imb)        # deterministic: first classes
+    is_imb = jnp.isin(train.y, imb_classes)
+    u = jax.random.uniform(kr, (train.n,))
+    keep = ~is_imb | (u < keep_frac)
+    idx = jnp.where(keep, size=train.n, fill_value=-1)[0]
+    n_keep = int(jnp.sum(keep))
+    idx = idx[:n_keep]
+    return (Dataset(train.x[idx], train.y[idx], num_classes), val)

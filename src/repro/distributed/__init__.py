@@ -1,0 +1,1 @@
+from repro.distributed import hints, sharding  # noqa: F401

@@ -1,0 +1,50 @@
+"""Sharding-constraint hints: named annotation points inside model code.
+
+Model code stays mesh-agnostic: it calls ``hints.constrain(x, "moe_dispatch")``
+at layout-critical points.  Outside any mesh context this is the identity; a
+driver (launch/dryrun.py, train/steps.py) installs a rule table mapping hint
+names to PartitionSpecs and the constraint becomes a
+``lax.with_sharding_constraint`` — the lever the §Perf hillclimb iterates on
+without touching model code.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def _rules() -> Optional[tuple[Mesh, dict]]:
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(mesh: Mesh, table: dict[str, P]):
+    """Install hint-name -> PartitionSpec rules for the enclosed trace."""
+    prev = _rules()
+    _state.rules = (mesh, table)
+    try:
+        yield
+    finally:
+        _state.rules = prev
+
+
+def constrain(x: jax.Array, name: str) -> jax.Array:
+    ctx = _rules()
+    if ctx is None:
+        return x
+    mesh, table = ctx
+    spec = table.get(name)
+    if spec is None:
+        return x
+    # Drop axes that don't divide the corresponding dim (divisibility
+    # fallback — same policy as distributed/sharding.py).
+    from repro.distributed.sharding import fit_spec
+    spec = fit_spec(x.shape, spec, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,190 @@
+"""PartitionSpec rules: params, activations, caches, optimizer state.
+
+Policy (DESIGN.md §6):
+  - batch dims shard over ('pod', 'data')   [DP; 'pod' is absent single-pod]
+  - Megatron TP over 'model': column-parallel up/gate/QKV, row-parallel
+    down/O, vocab-parallel embedding + head, experts over 'model' (EP)
+  - optional FSDP: parameters additionally sharded over 'data' on the
+    non-model dim (ZeRO-3 via GSPMD; all-gathers materialize per layer)
+  - KV caches: batch over 'data', head or head_dim over 'model', falling
+    back to sequence over 'data' for global_batch=1 (long_500k SP path)
+
+Every rule passes through ``fit_spec``: a mesh axis is dropped from a dim
+that it does not divide (gemma-2b's single KV head, hubert's 504-unit head
+before padding, 8-head models on a 16-way model axis...).  This is the single
+mechanism that makes all 10 archs lower on the same mesh.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+# Mesh axis names (multi-pod meshes add 'pod' in front).
+POD, DATA, MODEL = "pod", "data", "model"
+
+
+def dp_axes(mesh: Mesh) -> tuple:
+    return tuple(a for a in (POD, DATA) if a in mesh.axis_names)
+
+
+def axis_size(mesh: Mesh, name) -> int:
+    if isinstance(name, (tuple, list)):
+        return int(np.prod([axis_size(mesh, n) for n in name]))
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def fit_spec(shape: tuple, spec: P, mesh: Mesh) -> P:
+    """Drop mesh axes that do not evenly divide their dim (per-entry).
+
+    Composite entries like ('pod','data') are truncated left-to-right until
+    the product divides.
+    """
+    out = []
+    for dim, entry in zip(shape, tuple(spec) + (None,) * len(shape)):
+        if entry is None:
+            out.append(None)
+            continue
+        names = entry if isinstance(entry, tuple) else (entry,)
+        names = tuple(n for n in names if n in mesh.axis_names)
+        while names and dim % axis_size(mesh, names) != 0:
+            names = names[:-1]
+        if not names:
+            out.append(None)
+        elif len(names) == 1:
+            out.append(names[0])
+        else:
+            out.append(names)
+    return P(*out)
+
+
+def named(mesh: Mesh, shape: tuple, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, fit_spec(shape, spec, mesh))
+
+
+# ---------------------------------------------------------------------------
+# Parameter rules, keyed by pytree path substrings.
+# ---------------------------------------------------------------------------
+
+def _param_rule(path: str, ndim: int, fsdp: bool) -> P:
+    """PartitionSpec for one parameter, identified by its flattened path."""
+    f = DATA if fsdp else None
+    # --- MoE experts: E over model (EP); FSDP on the expert-internal dims.
+    if "w_gate" in path and ndim == 3:
+        return P(MODEL, f, None)
+    if "w_up" in path and ndim == 3:
+        return P(MODEL, f, None)
+    if "w_down" in path and ndim == 3:
+        return P(MODEL, None, f)
+    if "router" in path:
+        return P(None, MODEL)
+    # --- embeddings / head: vocab-parallel.
+    if "embed" in path or "lm_head" in path or "unit_head" in path:
+        return P(MODEL, f) if "embed" in path else P(f, MODEL)
+    # --- attention.
+    if any(k in path for k in ("wq", "wk", "wv")):
+        return P(f, MODEL)
+    if "wo" in path:
+        return P(MODEL, f)
+    if any(k in path for k in ("bq", "bk", "bv")):
+        return P(MODEL)
+    # --- dense FFN (also xlstm up/z projections, mamba in_proj).
+    if any(k in path for k in ("w_up", "w_gate", "in_proj", "up_proj",
+                               "z_proj", "wi_")):
+        return P(f, MODEL)
+    if any(k in path for k in ("w_down", "out_proj", "down_proj", "wo_")):
+        return P(MODEL, f)
+    # --- everything else (norms, convs, gates, scalars): replicate.
+    return P()
+
+
+def param_specs(cfg: ModelConfig, params: Any, fsdp: bool = False) -> Any:
+    """Pytree of PartitionSpecs matching ``params``.
+
+    Stacked super-block params (leading n_superblocks axis from the scan)
+    get their rule shifted right by one dim.
+    """
+
+    def one(path_parts, leaf):
+        path = "/".join(str(p) for p in path_parts)
+        ndim = leaf.ndim
+        stacked = path.startswith("blocks/") or path.startswith(
+            ("params/blocks",))
+        rule_ndim = ndim - 1 if stacked else ndim
+        rule = _param_rule(path, rule_ndim, fsdp)
+        if stacked:
+            rule = P(None, *tuple(rule))
+        return rule
+
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, leaf: one([_key_str(k) for k in kp], leaf), params
+    )
+
+
+def _key_str(k) -> str:
+    # DictKey('embed') -> embed ; SequenceKey(0) -> 0
+    for attr in ("key", "idx", "name"):
+        if hasattr(k, attr):
+            return str(getattr(k, attr))
+    return str(k)
+
+
+def param_shardings(cfg: ModelConfig, params: Any, mesh: Mesh,
+                    fsdp: bool = False) -> Any:
+    specs = param_specs(cfg, params, fsdp=fsdp)
+    return jax.tree_util.tree_map(
+        lambda leaf, spec: named(mesh, leaf.shape, spec), params, specs
+    )
+
+
+# ---------------------------------------------------------------------------
+# Activation / batch / cache rules.
+# ---------------------------------------------------------------------------
+
+def batch_spec(mesh: Mesh, ndim: int, *, seq_shard: bool = False) -> P:
+    """Tokens/labels/weights: leading batch dim over DP axes.  For
+    global_batch=1 long-context cells, shard the sequence dim instead."""
+    dp = dp_axes(mesh)
+    if seq_shard and ndim >= 2:
+        return P(None, dp if len(dp) > 1 else (dp[0] if dp else None))
+    return P(dp if len(dp) > 1 else (dp[0] if dp else None))
+
+
+def cache_spec(mesh: Mesh, shape: tuple, *, batch_first: bool = True,
+               seq_shard: bool = False) -> P:
+    """KV cache (B, S, H_kv, hd) or SSM state (B, H, P, N)."""
+    dp = dp_axes(mesh)
+    dpe = dp if len(dp) > 1 else (dp[0] if dp else None)
+    if len(shape) == 4:
+        if seq_shard:
+            return P(None, dpe, MODEL, None)
+        return P(dpe, None, MODEL, None)
+    if len(shape) == 3:
+        return P(dpe, None, MODEL)
+    if len(shape) == 2:
+        return P(dpe, None)
+    return P(dpe)
+
+
+def logical_rules(mesh: Mesh) -> dict:
+    """Hint-name -> PartitionSpec table consumed by distributed/hints.py.
+
+    These are the §Perf levers: the dry-run baseline uses exactly this table;
+    hillclimb iterations override entries.
+    """
+    dp = dp_axes(mesh)
+    dpe = dp if len(dp) > 1 else (dp[0] if dp else None)
+    return {
+        "moe_dispatch": P(dpe, MODEL, None, None),   # (G, E, C, d)
+        "moe_combine": P(dpe, MODEL, None, None),
+        "ffn_inner": P(dpe, None, MODEL),            # (B, S, d_ff)
+        "attn_out": P(dpe, None, MODEL),             # (B, S, q_dim)
+        "residual": P(dpe, None, None),              # (B, S, d_model)
+        "logits": P(dpe, None, MODEL),               # (B, S, vocab)
+    }

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the GRAD-MATCH selection hot spots.
+
+Layout (per kernel): <name>.py holds the pl.pallas_call + BlockSpec tiling,
+ref.py the pure-jnp oracles, ops.py the backend-aware jit'd dispatch.
+"""
+
+from repro.kernels.ops import corr, hidden_grad, lastlayer_grad, set_backend, sqdist
+
+__all__ = ["corr", "sqdist", "lastlayer_grad", "hidden_grad", "set_backend"]

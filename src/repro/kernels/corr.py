@@ -1,0 +1,68 @@
+"""Pallas TPU kernel: OMP residual correlation  scores = G @ r.
+
+This is the inner loop of OMP (Algorithm 2): every selection round scores all
+``n`` candidates against the current residual.  ``G`` is ``(n, d)`` gradient
+proxies (n up to ~1e5 candidate micro-batches, d = proxy dim ≲ 8192), ``r`` is
+``(d,)``.
+
+TPU tiling: rows are processed in MXU-aligned tiles of 128 and the proxy
+dimension in VMEM-sized chunks of 512; each grid step multiplies a
+``(128, 512)`` tile of G against the matching slice of ``r`` and accumulates
+into the per-row output tile, so the working set stays well inside VMEM
+(128*512*4B = 256 KiB per G tile) regardless of n and d.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_N = 128   # rows per grid step (MXU sublane-aligned)
+TILE_D = 512   # proxy-dim chunk per grid step (lane-aligned, 128 | TILE_D)
+
+
+def _corr_kernel(g_ref, r_ref, out_ref):
+    j = pl.program_id(1)
+    g = g_ref[...].astype(jnp.float32)          # (TILE_N, TILE_D)
+    r = r_ref[...].astype(jnp.float32)          # (TILE_D, 1)
+    partial = g @ r                             # (TILE_N, 1)  -- MXU matvec
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = partial
+
+    @pl.when(j > 0)
+    def _acc():
+        out_ref[...] += partial
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def corr(grads: jax.Array, residual: jax.Array, *, interpret: bool = False
+         ) -> jax.Array:
+    """scores = grads @ residual, f32.  grads (n, d), residual (d,) -> (n,).
+
+    Pads n up to TILE_N and d up to TILE_D (zero padding is exact for a dot
+    product) and strips the padding afterwards.
+    """
+    n, d = grads.shape
+    n_pad = (-n) % TILE_N
+    d_pad = (-d) % TILE_D
+    g = jnp.pad(grads, ((0, n_pad), (0, d_pad)))
+    r = jnp.pad(residual, (0, d_pad)).reshape(-1, 1)
+    np_, dp = g.shape
+
+    out = pl.pallas_call(
+        _corr_kernel,
+        grid=(np_ // TILE_N, dp // TILE_D),
+        in_specs=[
+            pl.BlockSpec((TILE_N, TILE_D), lambda i, j: (i, j)),
+            pl.BlockSpec((TILE_D, 1), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((TILE_N, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((np_, 1), jnp.float32),
+        interpret=interpret,
+    )(g, r)
+    return out[:n, 0]

@@ -1,0 +1,75 @@
+"""Backend-aware dispatch for the Pallas kernels.
+
+Public entry points used by core/ and benchmarks.  On TPU the Pallas kernels
+run compiled; on CPU (this container) they run through the Pallas interpreter
+when explicitly requested (tests) and otherwise fall back to the pure-jnp
+reference implementations, which XLA:CPU handles well.  The dispatch is a
+plain Python decision made at trace time — no runtime branching ends up in
+the compiled program.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import corr as corr_kernel
+from repro.kernels import lastlayer_grad as llg_kernel
+from repro.kernels import ref
+from repro.kernels import sqdist as sqdist_kernel
+
+# Resolution order: explicit override > TPU pallas > jnp reference.
+_FORCE: str | None = None  # "pallas" | "interpret" | "ref" | None
+
+
+def set_backend(mode: str | None) -> None:
+    """Force kernel dispatch: 'pallas', 'interpret', 'ref', or None (auto)."""
+    global _FORCE
+    assert mode in (None, "pallas", "interpret", "ref")
+    _FORCE = mode
+
+
+def _mode() -> str:
+    if _FORCE is not None:
+        return _FORCE
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def corr(grads: jax.Array, residual: jax.Array) -> jax.Array:
+    """OMP scores  G @ r  -> (n,) f32."""
+    mode = _mode()
+    if mode == "ref":
+        return ref.corr_ref(grads, residual)
+    return corr_kernel.corr(grads, residual, interpret=(mode == "interpret"))
+
+
+def sqdist(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Pairwise squared distances -> (n, m) f32."""
+    mode = _mode()
+    if mode == "ref":
+        return ref.sqdist_ref(a, b)
+    return sqdist_kernel.sqdist(a, b, interpret=(mode == "interpret"))
+
+
+def lastlayer_grad(hidden: jax.Array, logits: jax.Array, labels: jax.Array
+                   ) -> tuple[jax.Array, jax.Array]:
+    """(resid, per-gradient hidden grad) for classification heads."""
+    mode = _mode()
+    if mode == "ref":
+        return ref.lastlayer_grad_ref(hidden, logits, labels)
+    return llg_kernel.lastlayer_grad(
+        hidden, logits, labels, interpret=(mode == "interpret"))
+
+
+def hidden_grad(logits: jax.Array, labels: jax.Array, unembed: jax.Array
+                ) -> jax.Array:
+    """dL/dh = (softmax(Z) - onehot(Y)) @ W^T for LM heads, fused on TPU."""
+    mode = _mode()
+    if mode == "ref":
+        resid, _ = ref.lastlayer_grad_ref(
+            jnp.zeros((logits.shape[0], 1), jnp.float32), logits, labels)
+        return resid @ unembed.T.astype(resid.dtype)
+    return llg_kernel.hidden_grad_fused(
+        logits, labels, unembed, interpret=(mode == "interpret"))

@@ -1,0 +1,56 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels are validated against (tests sweep
+shapes/dtypes with ``interpret=True`` and assert_allclose against these), and
+they are also the dispatch fallback on backends without Pallas support
+(see ops.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def corr_ref(grads: jax.Array, residual: jax.Array) -> jax.Array:
+    """OMP residual-correlation scores:  (n, d) @ (d,) -> (n,) in f32."""
+    return grads.astype(jnp.float32) @ residual.astype(jnp.float32)
+
+
+def sqdist_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Pairwise squared euclidean distances  (n, d), (m, d) -> (n, m), f32.
+
+    Computed the numerically-stable expanded way (same contraction order the
+    kernel uses) so the oracle and the kernel agree to float tolerance.
+    """
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    an = jnp.sum(a * a, axis=-1)
+    bn = jnp.sum(b * b, axis=-1)
+    d2 = an[:, None] + bn[None, :] - 2.0 * (a @ b.T)
+    return jnp.maximum(d2, 0.0)
+
+
+def lastlayer_grad_ref(
+    hidden: jax.Array,   # (n, d_h)
+    logits: jax.Array,   # (n, v)
+    labels: jax.Array,   # (n,) int32
+) -> tuple[jax.Array, jax.Array]:
+    """Fused last-layer CE gradient pieces.
+
+    Returns
+      resid : (n, v)  = softmax(logits) - onehot(labels)   (dL/db per sample)
+      hgrad : (n, d_h) = resid @ nothing -- the *hidden-side* reduction the
+              per-batch proxy needs is resid^T @ hidden aggregated per batch;
+              here we return the per-sample row-scaled hidden
+              own_resid * hidden (the paper's per-gradient approximation),
+              own_resid = resid[i, labels[i]].
+    """
+    z = logits.astype(jnp.float32)
+    z = z - jax.lax.stop_gradient(jnp.max(z, axis=-1, keepdims=True))
+    p = jnp.exp(z) / jnp.sum(jnp.exp(z), axis=-1, keepdims=True)
+    y = jax.nn.one_hot(labels, logits.shape[-1], dtype=jnp.float32)
+    resid = p - y
+    own = jnp.take_along_axis(resid, labels[:, None].astype(jnp.int32), axis=-1)
+    hgrad = own * hidden.astype(jnp.float32)
+    return resid, hgrad

@@ -1,0 +1,49 @@
+"""Elastic scaling: restore a checkpoint onto a different device count.
+
+The checkpoint format (checkpoint/checkpoint.py) is layout-free: plain
+host arrays keyed by pytree path.  Re-meshing is therefore just
+``device_put`` with the *new* mesh's shardings — no resharding pass, no
+all-to-all, works across any (old devices) -> (new devices) transition
+including shrink (node loss) and grow (node recovery).
+
+``reshard_like(tree, shardings)`` is the restore half; the save half is
+whatever CheckpointManager wrote.  ``rendezvous`` models the control-plane
+decision a real cluster makes after a membership change: rebuild the mesh
+from the surviving device count and recompute shardings.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import param_shardings
+from repro.launch.mesh import make_host_mesh
+
+
+def reshard_like(tree_np: Any, shardings: Any) -> Any:
+    """device_put every leaf with its target sharding (pytrees must match).
+
+    Leaves of ``tree_np`` may be numpy (fresh from a checkpoint) or jax
+    arrays from a *different* mesh — both paths go through host transfer,
+    which is exactly what a post-failure restore does.
+    """
+    return jax.tree_util.tree_map(
+        lambda x, s: jax.device_put(np.asarray(x), s), tree_np, shardings)
+
+
+def rendezvous(cfg: ModelConfig, params_np: Any, *, data: int, model: int,
+               fsdp: bool = False) -> tuple[Mesh, Any]:
+    """Re-mesh onto the current device population and reshard params.
+
+    Returns (new mesh, resharded params).  Call after a membership change
+    with the surviving (data, model) split; every other piece of state
+    (optimizer slots, selection state) reshards with the same mechanism.
+    """
+    mesh = make_host_mesh(data, model)
+    sh = param_shardings(cfg, params_np, mesh, fsdp=fsdp)
+    return mesh, reshard_like(params_np, sh)

@@ -1,0 +1,162 @@
+"""ShapeDtypeStruct stand-ins + sharding specs for every dry-run cell.
+
+``input_specs(cfg, shape)`` returns the exact pytree of array stand-ins a
+step function consumes (weak-type-correct, shardable, **no allocation**);
+``batch_shardings`` / ``state_shardings`` assign NamedShardings with the
+divisibility-fallback policy of ``distributed.sharding.fit_spec``:
+
+  - batch dim  -> ('pod','data')          [dropped if it does not divide]
+  - KV-cache heads -> 'model', falling back to head_dim when the arch has
+    fewer KV heads than the model axis (gemma-2b MQA, gemma2-9b kv=8)
+  - global_batch=1 long-context cells -> sequence dim over ('pod','data')
+    (sequence parallelism for the 500k KV residency)
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.sharding import dp_axes, fit_spec
+from repro.models import lm as lm_lib
+
+BF16 = jnp.bfloat16
+
+
+def _sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Input stand-ins
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Batch pytree of ShapeDtypeStructs for (arch x shape).
+
+    train/prefill: the full (B, S) token batch (audio: frame embeddings,
+    vlm: tokens + patch embeddings).  decode: one new token (B, 1) + scalar
+    position; the KV/state cache is produced by ``decode_state_specs``.
+    """
+    b, s = shape.global_batch, shape.seq_len
+    kind = shape.kind
+    batch: dict[str, Any] = {}
+    if kind == "decode":
+        tok_shape = (b, 1)
+    else:
+        tok_shape = (b, s)
+
+    if cfg.family == "audio":
+        # Modality frontend is a stub: precomputed frame embeddings.
+        batch["embeds"] = _sds((*tok_shape, cfg.d_model), BF16)
+    else:
+        batch["tokens"] = _sds(tok_shape, jnp.int32)
+    if cfg.family == "vlm" and kind != "decode":
+        batch["vision"] = _sds((b, cfg.vision.n_tokens, cfg.vision.d_embed),
+                               BF16)
+    if kind == "train":
+        batch["targets"] = _sds(tok_shape, jnp.int32)
+        batch["weights"] = _sds((b,), jnp.float32)
+    if kind == "decode":
+        batch["pos"] = _sds((), jnp.int32)
+    return batch
+
+
+# ---------------------------------------------------------------------------
+# Sharding assignment
+# ---------------------------------------------------------------------------
+
+def batch_shardings(mesh: Mesh, batch: dict, *, seq_shard: bool = False
+                    ) -> dict:
+    dp = dp_axes(mesh)
+    dpe = dp if len(dp) > 1 else (dp[0] if dp else None)
+
+    def spec_for(name: str, sds) -> P:
+        if sds.ndim == 0:
+            return P()
+        if name == "weights":
+            return P(dpe)
+        if seq_shard and sds.ndim >= 2 and sds.shape[0] == 1:
+            # long-context: batch=1, shard the sequence dim instead.
+            return P(None, dpe, *([None] * (sds.ndim - 2)))
+        return P(dpe, *([None] * (sds.ndim - 1)))
+
+    return {
+        k: NamedSharding(mesh, fit_spec(v.shape, spec_for(k, v), mesh))
+        for k, v in batch.items()
+    }
+
+
+def _state_leaf_spec(path: str, shape: tuple, mesh: Mesh, *,
+                     stacked: bool, seq_shard: bool) -> P:
+    """Greedy divisible assignment for one decode-state leaf.
+
+    Layout conventions (models/*):
+      KV cache   (B, S, H_kv, hd)      slot_pos (B, S)
+      SSM state  (B, H, P, N)          conv state (B, W, d_in)
+      mLSTM C    (B, H, qk, v)         mlstm/slstm vectors (B, H*x) / (B, d)
+    """
+    dims = list(shape[1:]) if stacked else list(shape)
+    ndim = len(dims)
+    dp = dp_axes(mesh)
+    dpe = dp if len(dp) > 1 else (dp[0] if dp else None)
+    model = "model"
+    msize = mesh.shape[model]
+    dsize = 1
+    for a in dp:
+        dsize *= mesh.shape[a]
+
+    entries: list = [None] * ndim
+    # 1) data axes on the batch dim when divisible; else (long_500k) on the
+    #    sequence dim of KV caches.
+    if ndim >= 1 and dims[0] % dsize == 0 and dims[0] > 1:
+        entries[0] = dpe
+    elif seq_shard and ndim >= 2 and dims[1] % dsize == 0:
+        entries[1] = dpe
+    # 2) model axis on the first remaining dim it divides (heads, then
+    #    head_dim / state dims).  Skip the sequence dim of KV caches
+    #    (dim 1 for 4-d caches) so decode writes stay local in the common
+    #    case; fall back to it if nothing else divides.
+    candidates = [i for i in range(ndim - 1, 0, -1)
+                  if entries[i] is None]
+    candidates = sorted(candidates, key=lambda i: (i == 1, -i))
+    for i in candidates:
+        if dims[i] % msize == 0 and dims[i] > 1:
+            entries[i] = model
+            break
+    if stacked:
+        entries = [None] + entries
+    return P(*entries)
+
+
+def state_shardings(cfg: ModelConfig, mesh: Mesh, state_shapes: Any, *,
+                    seq_shard: bool = False) -> Any:
+    """NamedShardings for a decode-state pytree (of ShapeDtypeStructs)."""
+
+    def one(kp, leaf):
+        path = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+        stacked = path.startswith("blocks")
+        spec = _state_leaf_spec(path, leaf.shape, mesh, stacked=stacked,
+                                seq_shard=seq_shard)
+        return NamedSharding(mesh, fit_spec(leaf.shape, spec, mesh))
+
+    return jax.tree_util.tree_map_with_path(one, state_shapes)
+
+
+def decode_state_specs(cfg: ModelConfig, shape: ShapeConfig) -> Any:
+    """ShapeDtypeStruct pytree of the decode state (no allocation)."""
+    return jax.eval_shape(
+        lambda: lm_lib.init_decode_state(cfg, shape.global_batch,
+                                         shape.seq_len))
+
+
+def param_specs_shapes(cfg: ModelConfig) -> Any:
+    """ShapeDtypeStruct pytree of the parameters (no allocation)."""
+    return jax.eval_shape(
+        lambda: lm_lib.init_lm(cfg, jax.random.PRNGKey(0)))

@@ -1,0 +1,9 @@
+"""Pure-JAX functional model zoo (init/apply pairs, dict pytrees).
+
+lm.py assembles the 10 assigned architectures from the layer primitives in
+attention/ffn/moe/ssm/xlstm; classifier.py carries the paper's own small
+models for the faithful reproduction experiments.
+"""
+
+from repro.models import (attention, classifier, common, ffn, lm, moe, ssm,
+                          xlstm)  # noqa: F401

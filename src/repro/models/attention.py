@@ -1,0 +1,409 @@
+"""Self/cross attention with GQA/MQA, RoPE, sliding window, softcap, KV cache.
+
+One implementation covers all attention flavours in the assigned archs:
+
+  - full causal self-attention          (llama/qwen/starcoder/moonshot)
+  - bidirectional encoder attention     (hubert)
+  - MQA (n_kv_heads=1)                  (gemma-2b)
+  - local/global alternation + softcaps (gemma2-9b)
+  - q/k head RMSNorm                    (qwen3-moe)
+  - cross-attention to vision states    (llama-3.2-vision)
+  - shared-weight attention block       (zamba2; sharing handled by lm.py)
+
+Decode state: ``full`` layers carry a (B, S_max, n_kv, hd) cache written at
+the scalar position; ``window`` layers carry a ring buffer of ``window``
+slots plus a slot->absolute-position map, so a 500k-context gemma2 local
+layer holds only 4096 KV rows.  Cross-attn KV over the (static) vision
+states is computed once at prefill and reused every decode step.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.distributed import hints
+from repro.models import common
+from repro.models.common import apply_rope, dtype_of, softcap
+
+MASK_VALUE = -2.0e38
+
+
+def init_attention(cfg: ModelConfig, key: jax.Array, cross: bool = False
+                   ) -> dict:
+    dt = dtype_of(cfg)
+    kq, kk, kv, ko, kn = jax.random.split(key, 5)
+    kv_src = cfg.vision.d_embed if (cross and cfg.vision) else cfg.d_model
+    p = {
+        "wq": common.dense_init(kq, (cfg.d_model, cfg.q_dim), dt),
+        "wk": common.dense_init(kk, (kv_src, cfg.kv_dim), dt),
+        "wv": common.dense_init(kv, (kv_src, cfg.kv_dim), dt),
+        "wo": common.dense_init(ko, (cfg.q_dim, cfg.d_model), dt),
+    }
+    if cfg.attn_bias:
+        p["bq"] = jnp.zeros((cfg.q_dim,), dt)
+        p["bk"] = jnp.zeros((cfg.kv_dim,), dt)
+        p["bv"] = jnp.zeros((cfg.kv_dim,), dt)
+        p["bo"] = jnp.zeros((cfg.d_model,), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((cfg.head_dim,), jnp.float32)
+        p["k_norm"] = jnp.ones((cfg.head_dim,), jnp.float32)
+    return p
+
+
+def _project_q(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    q = x @ p["wq"]
+    if cfg.attn_bias:
+        q = q + p["bq"]
+    return q.reshape(*x.shape[:-1], cfg.n_heads, cfg.head_dim)
+
+
+def _project_kv(cfg: ModelConfig, p: dict, x: jax.Array
+                ) -> tuple[jax.Array, jax.Array]:
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.attn_bias:
+        k, v = k + p["bk"], v + p["bv"]
+    shape = (*x.shape[:-1], cfg.n_kv_heads, cfg.head_dim)
+    return k.reshape(shape), v.reshape(shape)
+
+
+def _qk_norm(cfg: ModelConfig, p: dict, q: jax.Array, k: jax.Array):
+    if cfg.qk_norm:
+        q = common.rms_head_norm(q, p["q_norm"])
+        k = common.rms_head_norm(k, p["k_norm"])
+    return q, k
+
+
+def _attend(cfg: ModelConfig, q: jax.Array, k: jax.Array, v: jax.Array,
+            mask: Optional[jax.Array]) -> jax.Array:
+    """q (B,Sq,H,D), k/v (B,Sk,Kv,D) -> (B,Sq,H*D).  GQA via head grouping;
+    softmax in f32; optional gemma2 attn-logit softcap."""
+    b, sq, h, d = q.shape
+    kvh = k.shape[2]
+    group = h // kvh
+    q = q.reshape(b, sq, kvh, group, d)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", q, k,
+                        preferred_element_type=jnp.float32)
+    logits = logits * (1.0 / jnp.sqrt(jnp.float32(d)))
+    if cfg.attn_softcap is not None:
+        logits = softcap(logits, cfg.attn_softcap)
+    if mask is not None:
+        # mask broadcasting: (Sq, Sk) or (B, Sq, Sk) -> (B?, 1, 1, Sq, Sk)
+        if mask.ndim == 2:
+            mask = mask[None, None, None]
+        elif mask.ndim == 3:
+            mask = mask[:, None, None]
+        logits = jnp.where(mask, logits, MASK_VALUE)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    probs = probs.astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out.reshape(b, sq, h * d)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise (flash-style) attention: online softmax over kv tiles
+# ---------------------------------------------------------------------------
+
+_M_INIT = -1.0e30
+
+
+def _tile_mask(qoff, koff, tq, tk, causal, window):
+    if not causal and window is None:
+        return None
+    qpos = qoff + jnp.arange(tq)[:, None]
+    kpos = koff + jnp.arange(tk)[None, :]
+    mask = jnp.ones((tq, tk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    return mask
+
+
+def _attend_blockwise(cfg: ModelConfig, q, k, v, *, causal: bool,
+                      window: Optional[int]) -> jax.Array:
+    """Tiled attention, never materializing (Sq, Sk).
+
+    q (B,Sq,H,D), k/v (B,Sk,KvH,D) -> (B,Sq,H*D).  Tile sizes from the
+    config; online softmax carries (m, l, acc) in f32 across kv tiles.
+
+    Two loop modes:
+      - ``cfg.unroll_scan``: python loops with tile SKIPPING (causal /
+        window) — the true FLOP schedule of a flash kernel, used by the
+        dry-run cost pass;
+      - default: ``lax.scan`` over q tiles x kv tiles with in-tile masking
+        — compact HLO for the production compile.
+    """
+    b, sq, h, d = q.shape
+    sk, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    tq = min(cfg.flash_block_q, sq)
+    tk = min(cfg.flash_block_kv, sk)
+    nq, nk = sq // tq, sk // tk
+    assert nq * tq == sq and nk * tk == sk, (sq, sk, tq, tk)
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+
+    qr = jnp.moveaxis(q.reshape(b, nq, tq, kvh, g, d), 1, 0)   # (nq,B,..)
+    kr = jnp.moveaxis(k.reshape(b, nk, tk, kvh, d), 1, 0)
+    vr = jnp.moveaxis(v.reshape(b, nk, tk, kvh, d), 1, 0)
+
+    def kv_step(qt, carry, kt, vt, qoff, koff):
+        m, l, acc = carry
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qt, kt,
+                       preferred_element_type=jnp.float32) * scale
+        if cfg.attn_softcap is not None:
+            s = softcap(s, cfg.attn_softcap)
+        mask = _tile_mask(qoff, koff, tq, tk, causal, window)
+        if mask is not None:
+            s = jnp.where(mask[None, None, None], s, _M_INIT)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])                      # <= 1
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bkgqs,bskd->bkgqd", p.astype(v.dtype), vt,
+            preferred_element_type=jnp.float32)
+        return m_new, l, acc
+
+    def q_tile(qi, qt):
+        qoff = qi * tq
+        m0 = jnp.full((b, kvh, g, tq), _M_INIT, jnp.float32)
+        l0 = jnp.zeros((b, kvh, g, tq), jnp.float32)
+        a0 = jnp.zeros((b, kvh, g, tq, d), jnp.float32)
+        if cfg.unroll_scan:
+            carry = (m0, l0, a0)
+            for ki in range(nk):
+                koff = ki * tk
+                if causal and koff > qoff + tq - 1:
+                    continue            # tile strictly above the diagonal
+                if window is not None and koff + tk - 1 <= qoff - window:
+                    continue            # tile strictly outside the window
+                carry = kv_step(qt, carry, kr[ki], vr[ki], qoff, koff)
+            m, l, acc = carry
+        else:
+            def body(carry, inp):
+                ki, kt, vt = inp
+                return kv_step(qt, carry, kt, vt, qoff, ki * tk), None
+
+            (m, l, acc), _ = lax.scan(
+                body, (m0, l0, a0),
+                (jnp.arange(nk), kr, vr))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]           # (b,kvh,g,tq,d)
+        return jnp.moveaxis(out, 3, 1).reshape(b, tq, h * d)
+
+    if cfg.unroll_scan:
+        tiles = [q_tile(i, qr[i]) for i in range(nq)]
+        out = jnp.concatenate(tiles, axis=1)
+    else:
+        def outer(_, inp):
+            qi, qt = inp
+            return None, q_tile(qi, qt)
+
+        _, tiles = lax.scan(outer, None, (jnp.arange(nq), qr))
+        out = jnp.moveaxis(tiles, 0, 1).reshape(b, sq, h * d)
+    return out.astype(v.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Train / prefill paths
+# ---------------------------------------------------------------------------
+
+def self_attention(cfg: ModelConfig, p: dict, x: jax.Array,
+                   positions: jax.Array, *, window: Optional[int] = None,
+                   return_cache: bool = False):
+    """Full-sequence self-attention.  x (B,S,d), positions (B,S)."""
+    b, s, _ = x.shape
+    q = _project_q(cfg, p, x)
+    k, v = _project_kv(cfg, p, x)
+    q, k = _qk_norm(cfg, p, q, k)
+    if cfg.rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    if s >= cfg.flash_threshold:
+        # 'q_full'/'kv_full' hints (no-ops unless a rule is installed):
+        # let a driver pin the Q/K/V layouts ONCE before the tile loops —
+        # e.g. gather an hd-sharded MQA KV (or head-sharded Q) here
+        # instead of per flash tile (§Perf cell 2).
+        q = hints.constrain(q, "q_full")
+        k = hints.constrain(k, "kv_full")
+        v = hints.constrain(v, "kv_full")
+        out = _attend_blockwise(cfg, q, k, v, causal=cfg.causal,
+                                window=window)
+    else:
+        if not cfg.causal:
+            mask = None
+        elif window is not None:
+            mask = common.window_mask(s, s, 0, window)
+        else:
+            mask = common.causal_mask(s, s, 0)
+        out = _attend(cfg, q, k, v, mask)
+    y = out @ p["wo"]
+    if cfg.attn_bias:
+        y = y + p["bo"]
+    if not return_cache:
+        return y, None
+    if window is not None:
+        # Keep only the trailing `window` positions in a ring buffer whose
+        # slot i holds absolute position  s - window + i  (mod window wraps
+        # transparently because we also store slot positions).
+        w = min(window, s)
+        ck = k[:, s - w:]
+        cv = v[:, s - w:]
+        cpos = jnp.broadcast_to(jnp.arange(s - w, s, dtype=jnp.int32), (b, w))
+        if w < window:  # pad unfilled slots (only when S < window)
+            pad = window - w
+            ck = jnp.pad(ck, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            cv = jnp.pad(cv, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            cpos = jnp.pad(cpos, ((0, 0), (0, pad)), constant_values=-1)
+        cache = {"k": ck, "v": cv, "slot_pos": cpos}
+    else:
+        cache = {"k": k, "v": v}
+    return y, cache
+
+
+def cross_attention(cfg: ModelConfig, p: dict, x: jax.Array,
+                    kv_states: Optional[jax.Array] = None,
+                    kv_cache: Optional[dict] = None,
+                    return_cache: bool = False):
+    """Cross-attention to (static) vision states: no RoPE, no causal mask."""
+    if kv_cache is not None:
+        k, v = kv_cache["k"], kv_cache["v"]
+    else:
+        k, v = _project_kv(cfg, p, kv_states)
+    q = _project_q(cfg, p, x)
+    if cfg.qk_norm:
+        q = common.rms_head_norm(q, p["q_norm"])
+        if kv_cache is None:
+            k = common.rms_head_norm(k, p["k_norm"])
+    out = _attend(cfg, q, k, v, mask=None)
+    y = out @ p["wo"]
+    if cfg.attn_bias:
+        y = y + p["bo"]
+    cache = {"k": k, "v": v} if return_cache else None
+    return y, cache
+
+
+# ---------------------------------------------------------------------------
+# Decode paths (single new token against a cache)
+# ---------------------------------------------------------------------------
+
+def init_decode_cache(cfg: ModelConfig, batch: int, s_max: int,
+                      window: Optional[int] = None) -> dict:
+    dt = dtype_of(cfg)
+    s = min(window, s_max) if window is not None else s_max
+    cache = {
+        "k": jnp.zeros((batch, s, cfg.n_kv_heads, cfg.head_dim), dt),
+        "v": jnp.zeros((batch, s, cfg.n_kv_heads, cfg.head_dim), dt),
+    }
+    if window is not None:
+        cache["slot_pos"] = jnp.full((batch, s), -1, jnp.int32)
+    return cache
+
+
+def _decode_attend_blockwise(cfg: ModelConfig, q, k, v, pos) -> jax.Array:
+    """Flash-decoding: one query against a long cache, tiled over KV.
+
+    q (B,1,H,D); k/v (B,S,KvH,D) with S >= cfg.flash_threshold.  A scan
+    over KV chunks carries the online-softmax (m, l, acc) — the 32k/500k
+    cache is only ever touched one chunk at a time (split-KV), so neither
+    the f32 score row nor any dtype upcast of the cache materializes at
+    full length.
+    """
+    b, _, h, d = q.shape
+    s, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    tk = min(cfg.flash_block_kv, s)
+    nk = s // tk
+    assert nk * tk == s, (s, tk)
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    qg = q.reshape(b, 1, kvh, g, d)
+
+    def chunk(arr, ki):
+        # dynamic_slice keeps the cache a loop-invariant operand — no
+        # transposed full-cache copy enters the scan.
+        return lax.dynamic_slice_in_dim(arr, ki * tk, tk, axis=1)
+
+    def body(carry, ki):
+        m, l, acc = carry
+        kt, vt = chunk(k, ki), chunk(v, ki)
+        sres = jnp.einsum("bqkgd,bskd->bkgqs", qg, kt,
+                          preferred_element_type=jnp.float32) * scale
+        if cfg.attn_softcap is not None:
+            sres = softcap(sres, cfg.attn_softcap)
+        kv_pos = ki * tk + jnp.arange(tk)
+        sres = jnp.where((kv_pos <= pos)[None, None, None, None], sres,
+                         _M_INIT)
+        m_new = jnp.maximum(m, jnp.max(sres, axis=-1))
+        pmat = jnp.exp(sres - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(pmat, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bkgqs,bskd->bkgqd", pmat.astype(v.dtype), vt,
+            preferred_element_type=jnp.float32)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, kvh, g, 1), _M_INIT, jnp.float32)
+    l0 = jnp.zeros((b, kvh, g, 1), jnp.float32)
+    a0 = jnp.zeros((b, kvh, g, 1, d), jnp.float32)
+    if cfg.unroll_scan:   # dry-run cost pass: true per-chunk FLOPs
+        carry = (m0, l0, a0)
+        for ki in range(nk):
+            carry, _ = body(carry, jnp.int32(ki))
+        m, l, acc = carry
+    else:
+        (m, l, acc), _ = lax.scan(body, (m0, l0, a0), jnp.arange(nk))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return jnp.moveaxis(out, 3, 1).reshape(b, 1, h * d).astype(v.dtype)
+
+
+def decode_self_attention(cfg: ModelConfig, p: dict, x: jax.Array,
+                          cache: dict, pos: jax.Array,
+                          window: Optional[int] = None):
+    """One-token decode.  x (B,1,d); pos () int32 absolute position of the
+    new token; cache as produced by init_decode_cache/self_attention."""
+    b = x.shape[0]
+    positions = jnp.broadcast_to(pos[None, None], (b, 1)).astype(jnp.int32)
+    q = _project_q(cfg, p, x)
+    k_new, v_new = _project_kv(cfg, p, x)
+    q, k_new = _qk_norm(cfg, p, q, k_new)
+    if cfg.rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k_new = apply_rope(k_new, positions, cfg.rope_theta)
+
+    # Never let a (possibly f32) new row promote the whole cache: the DUS
+    # must stay in the cache dtype or a 32k-context cache silently doubles.
+    k_new = k_new.astype(cache["k"].dtype)
+    v_new = v_new.astype(cache["v"].dtype)
+    if window is not None:
+        slot = jnp.mod(pos, cache["k"].shape[1])
+        k = lax.dynamic_update_slice_in_dim(cache["k"], k_new, slot, axis=1)
+        v = lax.dynamic_update_slice_in_dim(cache["v"], v_new, slot, axis=1)
+        slot_pos = lax.dynamic_update_slice_in_dim(
+            cache["slot_pos"], positions, slot, axis=1)
+        keep = (slot_pos > pos - window) & (slot_pos >= 0) & (slot_pos <= pos)
+        mask = keep[:, None, :]                              # (B, 1, W)
+        new_cache = {"k": k, "v": v, "slot_pos": slot_pos}
+    else:
+        k = lax.dynamic_update_slice_in_dim(cache["k"], k_new, pos, axis=1)
+        v = lax.dynamic_update_slice_in_dim(cache["v"], v_new, pos, axis=1)
+        new_cache = {"k": k, "v": v}
+        if k.shape[1] >= cfg.flash_threshold:
+            # flash-decoding: split-KV online softmax over the long cache
+            out = _decode_attend_blockwise(cfg, q, k, v, pos)
+            y = out @ p["wo"]
+            if cfg.attn_bias:
+                y = y + p["bo"]
+            return y, new_cache
+        kv_pos = jnp.arange(k.shape[1], dtype=jnp.int32)
+        mask = (kv_pos <= pos)[None, None, :]                # (1, 1, S)
+
+    out = _attend(cfg, q, k, v, mask)
+    y = out @ p["wo"]
+    if cfg.attn_bias:
+        y = y + p["bo"]
+    return y, new_cache

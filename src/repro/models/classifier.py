@@ -1,0 +1,89 @@
+"""Small classifiers for the paper-faithful experiments (LeNet-scale).
+
+The paper's own models are LeNet (MNIST) and ResNet18 (CIFAR/ImageNet); the
+repro experiments here use an MLP / LeNet-style CNN on structured synthetic
+data (no image datasets ship offline).  What matters to GRAD-MATCH is the
+interface these expose: ``apply`` returns (logits, last_hidden) so the
+selection proxies (last-layer gradients, paper §4) are closed-form.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.paper import ClassifierConfig
+from repro.models import common
+
+
+def init_classifier(cfg: ClassifierConfig, key: jax.Array) -> dict:
+    ks = jax.random.split(key, len(cfg.hidden) + 3)
+    p: dict = {}
+    if cfg.kind == "cnn":
+        h, w, c = cfg.image_shape
+        p["conv1"] = common.dense_init(ks[0], (5, 5, c, 6), jnp.float32,
+                                       fan_in=25 * c)
+        p["conv2"] = common.dense_init(ks[1], (5, 5, 6, 16), jnp.float32,
+                                       fan_in=25 * 6)
+        flat = (h // 4 - 3) * (w // 4 - 3) * 16
+        dims = (flat,) + cfg.hidden
+    else:
+        dims = (cfg.in_dim,) + cfg.hidden
+    for i in range(len(dims) - 1):
+        p[f"fc{i}"] = {
+            "w": common.dense_init(ks[2 + i], (dims[i], dims[i + 1]),
+                                   jnp.float32),
+            "b": jnp.zeros((dims[i + 1],), jnp.float32),
+        }
+    p["head"] = {
+        "w": common.dense_init(ks[-1], (dims[-1], cfg.num_classes),
+                               jnp.float32),
+        "b": jnp.zeros((cfg.num_classes,), jnp.float32),
+    }
+    return p
+
+
+def apply_classifier(cfg: ClassifierConfig, p: dict, x: jax.Array
+                     ) -> tuple[jax.Array, jax.Array]:
+    """Returns (logits (B, C), last_hidden (B, d)) — the hidden feeding the
+    final linear layer, which the GRAD-MATCH proxies need."""
+    act = common.activation(cfg.act)
+    if cfg.kind == "cnn":
+        h = lax.conv_general_dilated(
+            x, p["conv1"], (1, 1), "VALID",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        h = act(h)
+        h = lax.reduce_window(h, -jnp.inf, lax.max, (1, 2, 2, 1),
+                              (1, 2, 2, 1), "VALID")
+        h = lax.conv_general_dilated(
+            h, p["conv2"], (1, 1), "VALID",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        h = act(h)
+        h = lax.reduce_window(h, -jnp.inf, lax.max, (1, 2, 2, 1),
+                              (1, 2, 2, 1), "VALID")
+        h = h.reshape(h.shape[0], -1)
+    else:
+        h = x
+    i = 0
+    while f"fc{i}" in p:
+        h = act(h @ p[f"fc{i}"]["w"] + p[f"fc{i}"]["b"])
+        i += 1
+    logits = h @ p["head"]["w"] + p["head"]["b"]
+    return logits, h
+
+
+def classifier_loss(cfg: ClassifierConfig, p: dict, batch: dict
+                    ) -> tuple[jax.Array, dict]:
+    """Weighted CE (same weighted-subset objective as lm_loss)."""
+    logits, _ = apply_classifier(cfg, p, batch["x"])
+    lg = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lg, axis=-1)
+    own = jnp.take_along_axis(lg, batch["y"][:, None], axis=-1)[:, 0]
+    ce = lse - own                                            # (B,)
+    w = batch.get("weights")
+    if w is None:
+        w = jnp.full(ce.shape, 1.0 / ce.shape[0], jnp.float32)
+    loss = jnp.sum(w * ce)
+    acc = jnp.mean((jnp.argmax(lg, -1) == batch["y"]).astype(jnp.float32))
+    return loss, {"loss": loss, "acc": acc, "ce": jnp.mean(ce)}

@@ -1,0 +1,141 @@
+"""Shared model primitives: norms, activations, RoPE, init, dtype policy.
+
+Everything is functional: ``init_*`` builds a params pytree (plain dicts of
+jnp arrays), ``*_apply`` consumes it.  Mixed-precision policy: parameters are
+stored in ``cfg.param_dtype`` (bf16 for the big archs), matmuls run in the
+param dtype, and numerically-sensitive reductions (norm statistics, softmax,
+gate cumsums, the final loss) run in f32.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def dtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, fan_in: Optional[int] = None):
+    """Truncated-normal fan-in init (the LM-standard 1/sqrt(fan_in))."""
+    fan = fan_in if fan_in is not None else shape[0]
+    std = 1.0 / math.sqrt(max(fan, 1))
+    return (std * jax.random.truncated_normal(key, -2.0, 2.0, shape,
+                                              jnp.float32)).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms (params always f32: tiny, and scale precision matters)
+# ---------------------------------------------------------------------------
+
+def init_norm(cfg: ModelConfig, d: Optional[int] = None) -> dict:
+    d = d or cfg.d_model
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def norm_apply(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + 1e-5) * p["scale"] + p["bias"]
+    else:  # rmsnorm  (gemma convention: scale enters as (1 + s))
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + 1e-6) * p["scale"]
+    return y.astype(x.dtype)
+
+
+def rms_head_norm(x: jax.Array, scale: jax.Array) -> jax.Array:
+    """Per-head qk-norm (qwen3): normalize over the head_dim axis."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + 1e-6) * scale).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+
+def activation(name: str):
+    return {
+        "relu": jax.nn.relu,
+        "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+        "silu": jax.nn.silu,
+        # gate nonlinearity of the gated variants:
+        "geglu": lambda x: jax.nn.gelu(x, approximate=True),
+        "swiglu": jax.nn.silu,
+    }[name]
+
+
+def is_gated(name: str) -> bool:
+    return name in ("geglu", "swiglu")
+
+
+def softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
+    """gemma2 logit soft-capping: cap * tanh(x / cap)."""
+    if cap is None:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, D), positions: (B, S) int32 -> rotated x (same dtype).
+
+    Pairs (x[..., :D/2], x[..., D/2:]) — the 'split-half' convention (llama).
+    """
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                          # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, D/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Misc
+# ---------------------------------------------------------------------------
+
+def causal_mask(q_len: int, kv_len: int, q_offset) -> jax.Array:
+    """(q_len, kv_len) bool mask: True = attend.  q_offset = absolute position
+    of query row 0 (int or traced scalar)."""
+    q_pos = jnp.arange(q_len)[:, None] + q_offset
+    kv_pos = jnp.arange(kv_len)[None, :]
+    return kv_pos <= q_pos
+
+
+def window_mask(q_len: int, kv_len: int, q_offset, window: int) -> jax.Array:
+    q_pos = jnp.arange(q_len)[:, None] + q_offset
+    kv_pos = jnp.arange(kv_len)[None, :]
+    return (kv_pos <= q_pos) & (kv_pos > q_pos - window)
+
+
+def count_params(params) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(params))

@@ -1,0 +1,38 @@
+"""Dense FFN: plain 2-matrix MLP (gelu/silu) or gated 3-matrix (geglu/swiglu).
+
+Weight layout is sharding-friendly: up/gate are (d_model, d_ff) —
+column-parallel over the ``model`` axis — and down is (d_ff, d_model) —
+row-parallel (GSPMD inserts the reduce at the down matmul).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+from repro.models.common import dtype_of
+
+
+def init_ffn(cfg: ModelConfig, key: jax.Array, d_ff: int | None = None
+             ) -> dict:
+    dt = dtype_of(cfg)
+    d_ff = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "w_up": common.dense_init(k1, (cfg.d_model, d_ff), dt),
+        "w_down": common.dense_init(k2, (d_ff, cfg.d_model), dt, fan_in=d_ff),
+    }
+    if common.is_gated(cfg.act):
+        p["w_gate"] = common.dense_init(k3, (cfg.d_model, d_ff), dt)
+    return p
+
+
+def ffn_apply(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    act = common.activation(cfg.act)
+    if common.is_gated(cfg.act):
+        h = act(x @ p["w_gate"]) * (x @ p["w_up"])
+    else:
+        h = act(x @ p["w_up"])
+    return h @ p["w_down"]

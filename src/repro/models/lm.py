@@ -1,0 +1,450 @@
+"""LM assembly: config -> init / forward / loss / prefill / decode.
+
+One code path covers all 10 assigned architectures.  The layer stack is a
+``lax.scan`` over *super-blocks* (cfg.layer_pattern defines the sub-layers of
+one scanned block; heterogeneous archs scan their natural period — see
+DESIGN.md §5).  Three modes:
+
+  - ``train``:   stateless forward, optionally remat'd per super-block
+  - ``prefill``: forward that also returns the decode state pytree
+  - ``decode``:  one token against the state (the ``serve_step``)
+
+The weighted loss is the GRAD-MATCH integration point: ``lm_loss`` takes
+per-sequence weights ``w`` (the OMP output, summing to 1) and computes
+``sum_i w_i * meanCE_i`` — exactly the weighted-subset objective of paper
+Alg. 1 line 9, as a first-class input of the step function.
+
+Zamba2's shared attention block lives OUTSIDE the scan (its weights are
+reused at every invocation — the parameter-sharing trick); its per-invocation
+KV caches live INSIDE the scanned state (each invocation attends at its own
+depth).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import (ATTN, GLOBAL, LOCAL, MAMBA, MLSTM, SHARED_ATTN,
+                                SLSTM, XATTN, ModelConfig)
+from repro.distributed import hints
+from repro.models import attention, common, ffn, moe, ssm, xlstm
+from repro.models.common import dtype_of
+
+
+# ---------------------------------------------------------------------------
+# Sub-layer init / apply
+# ---------------------------------------------------------------------------
+
+def _has_ffn(cfg: ModelConfig, kind: str) -> bool:
+    return kind in (ATTN, LOCAL, GLOBAL, XATTN, SHARED_ATTN)
+
+
+def _init_ffn_or_moe(cfg: ModelConfig, key: jax.Array, kind: str) -> dict:
+    if cfg.uses_moe and kind != XATTN:
+        return moe.init_moe(cfg, key)
+    return ffn.init_ffn(cfg, key)
+
+
+def _init_sublayer(cfg: ModelConfig, kind: str, key: jax.Array) -> dict:
+    ks = jax.random.split(key, 4)
+    if kind in (ATTN, LOCAL, GLOBAL, SHARED_ATTN):
+        p = {
+            "norm1": common.init_norm(cfg),
+            "attn": attention.init_attention(cfg, ks[0]),
+            "norm2": common.init_norm(cfg),
+            "mlp": _init_ffn_or_moe(cfg, ks[1], kind),
+        }
+        if cfg.post_norm:
+            p["post_norm1"] = common.init_norm(cfg)
+            p["post_norm2"] = common.init_norm(cfg)
+        return p
+    if kind == XATTN:
+        return {
+            "norm1": common.init_norm(cfg),
+            "attn": attention.init_attention(cfg, ks[0], cross=True),
+            "norm2": common.init_norm(cfg),
+            "mlp": ffn.init_ffn(cfg, ks[1]),
+            "gate_attn": jnp.zeros((), jnp.float32),
+            "gate_mlp": jnp.zeros((), jnp.float32),
+        }
+    if kind == MAMBA:
+        return {"norm1": common.init_norm(cfg),
+                "mixer": ssm.init_mamba(cfg, ks[0])}
+    if kind == MLSTM:
+        return {"norm1": common.init_norm(cfg),
+                "mixer": xlstm.init_mlstm(cfg, ks[0])}
+    if kind == SLSTM:
+        return {"norm1": common.init_norm(cfg),
+                "mixer": xlstm.init_slstm(cfg, ks[0])}
+    raise ValueError(kind)
+
+
+def _init_substate(cfg: ModelConfig, kind: str, batch: int, s_max: int):
+    """Decode-state pytree for one sub-layer (zeros; prefill overwrites)."""
+    if kind in (ATTN, GLOBAL, SHARED_ATTN):
+        return attention.init_decode_cache(cfg, batch, s_max)
+    if kind == LOCAL:
+        return attention.init_decode_cache(cfg, batch, s_max,
+                                           window=cfg.sliding_window)
+    if kind == XATTN:
+        n_img = cfg.vision.n_tokens
+        dt = dtype_of(cfg)
+        return {
+            "k": jnp.zeros((batch, n_img, cfg.n_kv_heads, cfg.head_dim), dt),
+            "v": jnp.zeros((batch, n_img, cfg.n_kv_heads, cfg.head_dim), dt),
+        }
+    if kind == MAMBA:
+        return ssm.init_state(cfg, batch)
+    if kind == MLSTM:
+        return xlstm.init_mlstm_state(cfg, batch)
+    if kind == SLSTM:
+        return xlstm.init_slstm_state(cfg, batch)
+    raise ValueError(kind)
+
+
+def _apply_sublayer(cfg: ModelConfig, kind: str, p: dict, x: jax.Array, *,
+                    mode: str, positions: Optional[jax.Array] = None,
+                    pos: Optional[jax.Array] = None,
+                    state: Any = None, vision: Optional[jax.Array] = None):
+    """Returns (x_out, new_state, aux_loss)."""
+    aux = jnp.float32(0.0)
+    want_state = mode == "prefill"
+
+    if kind in (ATTN, LOCAL, GLOBAL, SHARED_ATTN):
+        window = cfg.sliding_window if kind == LOCAL else None
+        h = common.norm_apply(cfg, p["norm1"], x)
+        if mode == "decode":
+            a, new_attn_state = attention.decode_self_attention(
+                cfg, p["attn"], h, state, pos, window=window)
+        else:
+            a, new_attn_state = attention.self_attention(
+                cfg, p["attn"], h, positions, window=window,
+                return_cache=want_state)
+        if cfg.post_norm:
+            a = common.norm_apply(cfg, p["post_norm1"], a)
+        x = x + a
+        h = common.norm_apply(cfg, p["norm2"], x)
+        if cfg.uses_moe:
+            f, aux = moe.moe_apply(cfg, p["mlp"], h,
+                                   group="batch" if mode == "decode"
+                                   else "seq")
+        else:
+            f = ffn.ffn_apply(cfg, p["mlp"], h)
+        if cfg.post_norm:
+            f = common.norm_apply(cfg, p["post_norm2"], f)
+        x = x + f
+        x = hints.constrain(x, "residual")
+        return x, new_attn_state, aux
+
+    if kind == XATTN:
+        h = common.norm_apply(cfg, p["norm1"], x)
+        if mode == "decode":
+            a, _ = attention.cross_attention(cfg, p["attn"], h,
+                                             kv_cache=state)
+            new_state = state  # vision KV is static during decode
+        else:
+            a, new_state = attention.cross_attention(
+                cfg, p["attn"], h, kv_states=vision,
+                return_cache=want_state)
+        x = x + jnp.tanh(p["gate_attn"]).astype(x.dtype) * a
+        h = common.norm_apply(cfg, p["norm2"], x)
+        f = ffn.ffn_apply(cfg, p["mlp"], h)
+        x = x + jnp.tanh(p["gate_mlp"]).astype(x.dtype) * f
+        x = hints.constrain(x, "residual")
+        return x, new_state, aux
+
+    # recurrent mixers (mamba2 / mlstm / slstm)
+    h = common.norm_apply(cfg, p["norm1"], x)
+    fn = {MAMBA: (ssm.mamba_apply, ssm.mamba_decode),
+          MLSTM: (xlstm.mlstm_apply, xlstm.mlstm_decode),
+          SLSTM: (xlstm.slstm_apply, xlstm.slstm_decode)}[kind]
+    if mode == "decode":
+        y, new_state = fn[1](cfg, p["mixer"], h, state)
+    else:
+        y, new_state = fn[0](cfg, p["mixer"], h, state=state,
+                             return_state=want_state)
+    x = x + y
+    x = hints.constrain(x, "residual")
+    return x, new_state, aux
+
+
+# ---------------------------------------------------------------------------
+# Whole-model init
+# ---------------------------------------------------------------------------
+
+def init_lm(cfg: ModelConfig, key: jax.Array) -> dict:
+    keys = jax.random.split(key, 8)
+    dt = dtype_of(cfg)
+    params: dict = {}
+
+    if not cfg.encoder_only or cfg.family != "audio":
+        params["embed"] = common.embed_init(
+            keys[0], (cfg.padded_vocab, cfg.d_model), dt)
+    if cfg.encoder_only:
+        # hubert head: frame hidden -> unit logits
+        params["unit_head"] = common.dense_init(
+            keys[1], (cfg.d_model, cfg.padded_vocab), dt)
+    elif not cfg.tie_embeddings:
+        params["lm_head"] = common.dense_init(
+            keys[1], (cfg.d_model, cfg.padded_vocab), dt)
+
+    # Prologue (unscanned) layers.
+    if cfg.prologue:
+        params["prologue"] = {
+            f"pro{i}": _init_sublayer(cfg, kind,
+                                      jax.random.fold_in(keys[2], i))
+            for i, kind in enumerate(cfg.prologue)
+        }
+
+    # Shared block (zamba2): one set of weights, reused per invocation.
+    if SHARED_ATTN in cfg.layer_pattern:
+        params["shared"] = _init_sublayer(cfg, SHARED_ATTN, keys[3])
+
+    # Scanned super-blocks: stack per-superblock params on a leading axis.
+    def one_superblock(k):
+        out = {}
+        for si, kind in enumerate(cfg.layer_pattern):
+            if kind == SHARED_ATTN:
+                continue  # weights live in params['shared']
+            out[f"sub{si}"] = _init_sublayer(cfg, kind,
+                                             jax.random.fold_in(k, si))
+        return out
+
+    if cfg.n_superblocks:
+        blocks = [one_superblock(jax.random.fold_in(keys[4], i))
+                  for i in range(cfg.n_superblocks)]
+        params["blocks"] = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *blocks)
+
+    params["final_norm"] = common.init_norm(cfg)
+    return params
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, s_max: int) -> dict:
+    """Full decode-state pytree (scanned states stacked over superblocks)."""
+    state: dict = {}
+    if cfg.prologue:
+        state["prologue"] = {
+            f"pro{i}": _init_substate(cfg, kind, batch, s_max)
+            for i, kind in enumerate(cfg.prologue)
+        }
+
+    def one_superblock():
+        return {f"sub{si}": _init_substate(cfg, kind, batch, s_max)
+                for si, kind in enumerate(cfg.layer_pattern)}
+
+    if cfg.n_superblocks:
+        blocks = [one_superblock() for _ in range(cfg.n_superblocks)]
+        state["blocks"] = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *blocks)
+    return state
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _embed_in(cfg: ModelConfig, params: dict, tokens: Optional[jax.Array],
+              embeds: Optional[jax.Array]) -> jax.Array:
+    if embeds is not None:
+        return embeds.astype(dtype_of(cfg))
+    x = params["embed"][tokens]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return x
+
+
+def _head_out(cfg: ModelConfig, params: dict, h: jax.Array) -> jax.Array:
+    h = common.norm_apply(cfg, params["final_norm"], h)
+    if cfg.encoder_only:
+        logits = h @ params["unit_head"]
+    elif cfg.tie_embeddings:
+        logits = h @ params["embed"].T
+    else:
+        logits = h @ params["lm_head"]
+    logits = common.softcap(logits, cfg.logit_softcap)
+    logits = hints.constrain(logits, "logits")
+    return logits
+
+
+def mask_padded_logits(cfg: ModelConfig, logits: jax.Array) -> jax.Array:
+    if cfg.padded_vocab == cfg.vocab_size:
+        return logits
+    v = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+    return jnp.where(v, logits, jnp.asarray(-1e9, logits.dtype))
+
+
+def forward(cfg: ModelConfig, params: dict, tokens: Optional[jax.Array] = None,
+            *, embeds: Optional[jax.Array] = None,
+            vision: Optional[jax.Array] = None,
+            mode: str = "train", states: Optional[dict] = None,
+            pos: Optional[jax.Array] = None):
+    """Trunk forward.  Returns (hidden (B,S,d), new_states, aux_loss)."""
+    x = _embed_in(cfg, params, tokens, embeds)
+    if vision is not None:
+        vision = vision.astype(dtype_of(cfg))
+    b, s, _ = x.shape
+    if mode == "decode":
+        positions = None
+    else:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    aux = jnp.float32(0.0)
+    new_states: dict = {}
+
+    def sub(kind, p, x, st):
+        return _apply_sublayer(cfg, kind, p, x, mode=mode,
+                               positions=positions, pos=pos, state=st,
+                               vision=vision)
+
+    # ---- prologue ----------------------------------------------------------
+    if cfg.prologue:
+        new_states["prologue"] = {}
+        for i, kind in enumerate(cfg.prologue):
+            st = states["prologue"][f"pro{i}"] if states else None
+            x, nst, a = sub(kind, params["prologue"][f"pro{i}"], x, st)
+            aux = aux + a
+            if nst is not None:
+                new_states["prologue"][f"pro{i}"] = nst
+
+    # ---- scanned super-blocks ---------------------------------------------
+    if cfg.n_superblocks:
+        shared_p = params.get("shared")
+
+        def body(carry, xs_slice):
+            xx, aa = carry
+            bp, bst = xs_slice
+            out_states = {}
+            for si, kind in enumerate(cfg.layer_pattern):
+                p = shared_p if kind == SHARED_ATTN else bp[f"sub{si}"]
+                st = bst[f"sub{si}"] if bst is not None else None
+                xx, nst, a = sub(kind, p, xx, st)
+                aa = aa + a
+                out_states[f"sub{si}"] = (
+                    nst if nst is not None else jnp.zeros((), jnp.float32))
+            return (xx, aa), out_states
+
+        body_fn = body
+        if cfg.remat and mode == "train":
+            body_fn = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+
+        unroll = cfg.n_superblocks if cfg.unroll_scan else 1
+        bstates = states["blocks"] if states else None
+        if bstates is None:
+            # feed a None-shaped placeholder via explicit loop over scan xs
+            xs = (params["blocks"], None)
+
+            def body_nostate(carry, bp):
+                return body_fn(carry, (bp, None))
+
+            (x, aux), ys = lax.scan(body_nostate, (x, aux), params["blocks"],
+                                    unroll=unroll)
+        else:
+            (x, aux), ys = lax.scan(body_fn, (x, aux),
+                                    (params["blocks"], bstates),
+                                    unroll=unroll)
+        if mode == "prefill" or mode == "decode":
+            new_states["blocks"] = ys
+
+    return x, new_states, aux
+
+
+# ---------------------------------------------------------------------------
+# Loss (weighted-subset CE: the paper's Alg. 1 line 9 objective)
+# ---------------------------------------------------------------------------
+
+def token_ce(cfg: ModelConfig, logits: jax.Array, targets: jax.Array
+             ) -> jax.Array:
+    """Stable per-token CE in f32.  logits (..., Vpad), targets (...)."""
+    lg = logits.astype(jnp.float32)
+    if cfg.padded_vocab != cfg.vocab_size:
+        v = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+        lg = jnp.where(v, lg, -1e9)
+    lse = jax.scipy.special.logsumexp(lg, axis=-1)
+    own = jnp.take_along_axis(lg, targets[..., None], axis=-1)[..., 0]
+    return lse - own
+
+
+def lm_loss(cfg: ModelConfig, params: dict, batch: dict
+            ) -> tuple[jax.Array, dict]:
+    """Weighted-subset LM/encoder loss.
+
+    batch: tokens (B,S) [or embeds (B,S,d) for audio], targets (B,S),
+    optional weights (B,) summing to 1 (defaults to uniform), optional
+    loss_mask (B,S), optional vision (B,N,d_vis).
+    Returns (loss, metrics).
+    """
+    h, _, aux = forward(
+        cfg, params, batch.get("tokens"), embeds=batch.get("embeds"),
+        vision=batch.get("vision"), mode="train")
+    logits = _head_out(cfg, params, h)
+    ce = token_ce(cfg, logits, batch["targets"])              # (B,S) f32
+    mask = batch.get("loss_mask")
+    if mask is not None:
+        per_seq = jnp.sum(ce * mask, -1) / jnp.maximum(jnp.sum(mask, -1), 1)
+    else:
+        per_seq = jnp.mean(ce, axis=-1)                       # (B,)
+    w = batch.get("weights")
+    if w is None:
+        w = jnp.full(per_seq.shape, 1.0 / per_seq.shape[0], jnp.float32)
+    loss = jnp.sum(w.astype(jnp.float32) * per_seq) + aux
+    metrics = {"ce": jnp.mean(per_seq), "aux": aux, "loss": loss}
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# Serving steps
+# ---------------------------------------------------------------------------
+
+def prefill_step(cfg: ModelConfig, params: dict, tokens: Optional[jax.Array],
+                 *, embeds=None, vision=None):
+    """Process the whole prompt; return (last-token logits, decode states)."""
+    h, states, _ = forward(cfg, params, tokens, embeds=embeds, vision=vision,
+                           mode="prefill")
+    logits = _head_out(cfg, params, h[:, -1:])[:, 0]
+    logits = mask_padded_logits(cfg, logits)
+    return logits, states
+
+
+def decode_step(cfg: ModelConfig, params: dict, states: dict,
+                tokens: jax.Array, pos: jax.Array):
+    """One new token (B,1) at absolute position ``pos`` (scalar int32)
+    against the decode state.  Returns (logits (B, Vpad), new states)."""
+    h, new_states, _ = forward(cfg, params, tokens, mode="decode",
+                               states=states, pos=pos)
+    logits = _head_out(cfg, params, h)[:, 0]
+    logits = mask_padded_logits(cfg, logits)
+    return logits, new_states
+
+
+# ---------------------------------------------------------------------------
+# Selection proxies (GRAD-MATCH hook): last-layer gradients for LM heads
+# ---------------------------------------------------------------------------
+
+def selection_proxy(cfg: ModelConfig, params: dict, batch: dict
+                    ) -> jax.Array:
+    """Per-sequence gradient proxy (B, d_model): the exact head-input
+    gradient dL/dh mean-pooled over tokens (paper §4 last-layer trick,
+    adapted to LM heads — DESIGN.md §3).  No trunk backprop.
+    """
+    h, _, _ = forward(cfg, params, batch.get("tokens"),
+                      embeds=batch.get("embeds"),
+                      vision=batch.get("vision"), mode="train")
+    logits = _head_out(cfg, params, h)
+    if cfg.encoder_only:
+        w_head = params["unit_head"]
+    elif cfg.tie_embeddings:
+        w_head = params["embed"].T
+    else:
+        w_head = params["lm_head"]
+    resid = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    resid = resid - jax.nn.one_hot(batch["targets"], cfg.padded_vocab,
+                                   dtype=jnp.float32)
+    # dL/dh_t = resid_t @ W^T ; mean over tokens -> one proxy per sequence.
+    g = jnp.einsum("bsv,dv->bsd", resid, w_head.astype(jnp.float32))
+    return jnp.mean(g, axis=1)

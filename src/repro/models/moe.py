@@ -1,0 +1,144 @@
+"""Mixture-of-Experts FFN with capacity-bounded sparse-index dispatch.
+
+Routing (top-k over softmax router probs, renormalized) follows
+Switch/Mixtral; dispatch is the memory-optimal *sparse-index* form rather
+than the GShard one-hot einsum: per token group we build an (E, C) table of
+token ids by stable-sorting the (T*k,) expert assignments, gather the routed
+activations to (E, C, d), run the expert FFNs as one batched einsum against
+the (E, d, ff) expert weights, and scatter-add back with the combine weights.
+
+Memory is O(routed_tokens * d) — the one-hot dispatch tensor (T, E, C) that
+made CRAIG-era MoE impls OOM never exists.  Expert-parallelism: the expert
+weights' leading E axis shards over the ``model`` mesh axis; the
+``hints.constrain`` calls let drivers pin the (G, E, C, d) routed activations
+to ('data', 'model', None, None), which GSPMD realizes as the canonical
+all-to-all at dispatch and combine.
+
+Token groups: training/prefill treat each sequence as a group (routing and
+capacity are per-sequence, G = batch); decode treats the whole batch as one
+group.  Capacity C = ceil(cf * T_g * k / E), >= 4 for lane alignment.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.distributed import hints
+from repro.models import common
+from repro.models.common import dtype_of
+
+
+def init_moe(cfg: ModelConfig, key: jax.Array) -> dict:
+    m = cfg.moe
+    dt = dtype_of(cfg)
+    kr, kg, ku, kd, ks = jax.random.split(key, 5)
+    d, ff, e = cfg.d_model, m.d_ff, m.n_experts
+    p = {
+        "router": common.dense_init(kr, (d, e), jnp.float32),
+        "w_gate": common.dense_init(kg, (e, d, ff), dt, fan_in=d),
+        "w_up": common.dense_init(ku, (e, d, ff), dt, fan_in=d),
+        "w_down": common.dense_init(kd, (e, ff, d), dt, fan_in=ff),
+    }
+    if m.n_shared_experts:
+        from repro.models import ffn
+        shared_cfg = cfg.replace(act="swiglu")
+        p["shared"] = ffn.init_ffn(shared_cfg, ks,
+                                   d_ff=m.d_ff * m.n_shared_experts)
+    return p
+
+
+def capacity_of(cfg: ModelConfig, group_tokens: int) -> int:
+    m = cfg.moe
+    c = math.ceil(m.capacity_factor * group_tokens * m.top_k / m.n_experts)
+    return max(4, min(c, group_tokens))
+
+
+def _route(cfg: ModelConfig, router_w: jax.Array, x: jax.Array):
+    """x (G, T, d) -> top-k (idx, weight) per token + load-balance aux loss."""
+    m = cfg.moe
+    logits = x.astype(jnp.float32) @ router_w                  # (G, T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = lax.top_k(probs, m.top_k)                   # (G, T, k)
+    top_w = top_w / jnp.maximum(jnp.sum(top_w, -1, keepdims=True), 1e-9)
+    # Switch-style load-balance loss: E * sum_e f_e * p_e  (per group, then
+    # averaged) — f_e = fraction of tokens whose top-1 is e, p_e = mean prob.
+    f = jnp.mean(jax.nn.one_hot(top_i[..., 0], m.n_experts), axis=1)  # (G, E)
+    pbar = jnp.mean(probs, axis=1)                                    # (G, E)
+    aux = m.n_experts * jnp.mean(jnp.sum(f * pbar, axis=-1))
+    return top_i, top_w.astype(x.dtype), aux
+
+
+def _dispatch_indices(eid: jax.Array, w: jax.Array, n_experts: int,
+                      capacity: int):
+    """eid/w (T, k) -> idx (E, C) token ids (sentinel=T), cw (E, C) weights.
+
+    Stable sort groups assignments by expert; rank-within-expert beyond the
+    capacity is dropped (classic capacity truncation, arrival order).
+    """
+    t, k = eid.shape
+    flat_e = eid.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+    flat_w = w.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    e_s, t_s, w_s = flat_e[order], flat_t[order], flat_w[order]
+    counts = jnp.zeros((n_experts,), jnp.int32).at[flat_e].add(1)
+    start = jnp.cumsum(counts) - counts
+    rank = jnp.arange(t * k, dtype=jnp.int32) - start[e_s]
+    idx = jnp.full((n_experts, capacity), t, jnp.int32)
+    idx = idx.at[e_s, rank].set(t_s, mode="drop")
+    cw = jnp.zeros((n_experts, capacity), w.dtype)
+    cw = cw.at[e_s, rank].set(w_s, mode="drop")
+    return idx, cw
+
+
+def moe_apply(cfg: ModelConfig, p: dict, x: jax.Array,
+              group: str = "seq") -> tuple[jax.Array, jax.Array]:
+    """x (B, S, d) -> (y (B, S, d), aux_loss ()).
+
+    group='seq': one routing group per sequence (train/prefill);
+    group='batch': single group over all tokens (decode, S==1).
+    """
+    m = cfg.moe
+    b, s, d = x.shape
+    if group == "batch":
+        xg = x.reshape(1, b * s, d)
+    else:
+        xg = x.reshape(b, s, d)
+    g, t, _ = xg.shape
+    cap = capacity_of(cfg, t)
+
+    top_i, top_w, aux = _route(cfg, p["router"], xg)
+    idx, cw = jax.vmap(
+        lambda e, w: _dispatch_indices(e, w, m.n_experts, cap)
+    )(top_i, top_w)                                          # (G,E,C) x2
+
+    # Gather routed tokens; sentinel t -> zero row.
+    xpad = jnp.concatenate([xg, jnp.zeros((g, 1, d), xg.dtype)], axis=1)
+    xe = jax.vmap(lambda xp, ix: xp[ix])(xpad, idx)          # (G, E, C, d)
+    xe = hints.constrain(xe, "moe_dispatch")
+
+    # Expert FFN (always gated/swiglu in the assigned MoE archs).
+    h = jnp.einsum("gecd,edf->gecf", xe, p["w_gate"])
+    h = jax.nn.silu(h) * jnp.einsum("gecd,edf->gecf", xe, p["w_up"])
+    ye = jnp.einsum("gecf,efd->gecd", h, p["w_down"])
+    ye = hints.constrain(ye, "moe_combine")
+
+    # Scatter-add back with combine weights (sentinel rows dropped).
+    def _combine(y_e, ix, w_e):
+        out = jnp.zeros((t, d), ye.dtype)
+        return out.at[ix.reshape(-1)].add(
+            (y_e * w_e[..., None]).reshape(-1, d), mode="drop")
+
+    y = jax.vmap(_combine)(ye, idx, cw)                      # (G, T, d)
+    y = y.reshape(b, s, d)
+
+    if m.n_shared_experts:
+        from repro.models import ffn
+        shared_cfg = cfg.replace(act="swiglu")
+        y = y + ffn.ffn_apply(shared_cfg, p["shared"], x)
+    return y, aux * m.router_aux_weight

@@ -1,0 +1,203 @@
+"""Mamba2 (SSD — state-space duality) block, chunkwise-parallel.
+
+Training/prefill use the SSD chunked algorithm (Dao & Gu 2024): within a
+chunk of Q tokens the output is a masked attention-like contraction; across
+chunks a (H, P, N) state is carried by a short ``lax.scan``.  Decode is the
+O(1) recurrence  h' = exp(dt*A) h + dt * B (x) outer,  y = C . h' + D x.
+
+All decay math runs in f32; dA = dt * A <= 0 always (A = -exp(A_log),
+dt = softplus >= 0), so every exp() in the chunked form is <= 1 — no
+stabilizers needed (unlike the xLSTM block, which has exponential *input*
+gates and does need them).
+
+Projections are stored separately (x/z/B/C/dt) rather than as one fused
+in_proj so each can carry its natural PartitionSpec (d_inner column-parallel
+over 'model'; the small B/C/dt heads replicated) — see
+distributed/sharding.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+from repro.models.common import dtype_of
+
+
+def dims(cfg: ModelConfig) -> tuple[int, int, int, int]:
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    n_heads = d_in // s.head_dim
+    return d_in, n_heads, s.head_dim, s.d_state
+
+
+def init_mamba(cfg: ModelConfig, key: jax.Array) -> dict:
+    s = cfg.ssm
+    dt = dtype_of(cfg)
+    d_in, nh, _, n = dims(cfg)
+    ks = jax.random.split(key, 9)
+    return {
+        "out_proj": common.dense_init(ks[8], (d_in, cfg.d_model), dt,
+                                      fan_in=d_in),
+        "x_proj": common.dense_init(ks[0], (cfg.d_model, d_in), dt),
+        "z_proj": common.dense_init(ks[1], (cfg.d_model, d_in), dt),
+        "b_proj": common.dense_init(ks[2], (cfg.d_model, n), dt),
+        "c_proj": common.dense_init(ks[3], (cfg.d_model, n), dt),
+        "dt_proj": common.dense_init(ks[4], (cfg.d_model, nh), dt),
+        "conv_x": common.dense_init(ks[5], (s.d_conv, d_in), dt, fan_in=s.d_conv),
+        "conv_b": common.dense_init(ks[6], (s.d_conv, n), dt, fan_in=s.d_conv),
+        "conv_c": common.dense_init(ks[7], (s.d_conv, n), dt, fan_in=s.d_conv),
+        "a_log": jnp.zeros((nh,), jnp.float32),       # A = -exp(a_log) = -1
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.full((nh,), -2.0, jnp.float32),  # softplus(-2) ~ 0.13
+        "gate_norm": jnp.ones((d_in,), jnp.float32),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, tail: jax.Array | None = None):
+    """Depthwise causal conv.  x (B,T,C), w (W,C); tail (B,W-1,C) carries the
+    previous tokens (decode/prefill continuation).  Returns (y, new_tail)."""
+    width = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    xe = jnp.concatenate([tail, x], axis=1)               # (B, T+W-1, C)
+    y = sum(xe[:, i:i + x.shape[1]] * w[i] for i in range(width))
+    new_tail = xe[:, xe.shape[1] - (width - 1):]
+    return y, new_tail
+
+
+def _gated_rmsnorm(y: jax.Array, z: jax.Array, scale: jax.Array) -> jax.Array:
+    """Mamba2's norm-then-gate: rmsnorm(y * silu(z)) * scale."""
+    g = (y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32)))
+    ms = jnp.mean(jnp.square(g), axis=-1, keepdims=True)
+    return (g * lax.rsqrt(ms + 1e-6) * scale).astype(y.dtype)
+
+
+def _ssd_chunked(xh, dtv, bmat, cmat, a, chunk, state0):
+    """SSD scan.  xh (B,T,H,P); dtv (B,T,H) f32; bmat/cmat (B,T,N); a (H,) f32
+    negative; state0 (B,H,P,N) f32.  Returns (y (B,T,H,P), state (B,H,P,N))."""
+    b, t, h, p = xh.shape
+    n = bmat.shape[-1]
+    q = min(chunk, t)
+    nc = t // q
+    assert nc * q == t, f"seq {t} not divisible by chunk {q}"
+
+    xc = xh.reshape(b, nc, q, h, p)
+    dtc = dtv.reshape(b, nc, q, h)
+    bc = bmat.reshape(b, nc, q, n).astype(jnp.float32)
+    cc = cmat.reshape(b, nc, q, n).astype(jnp.float32)
+
+    da = dtc * a                                         # (B,nc,Q,H) <= 0
+    cum = jnp.cumsum(da, axis=2)                         # within-chunk cumsum
+    total = cum[:, :, -1]                                # (B,nc,H)
+
+    # --- intra-chunk (attention-like, causal-masked decay matrix) ---------
+    # L[b,c,h,i,j] = exp(cum_i - cum_j) for i >= j else 0
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,Qi,Qj,H)
+    mask = (jnp.arange(q)[:, None] >= jnp.arange(q)[None, :])[None, None, :, :,
+                                                              None]
+    decay = jnp.where(mask, jnp.exp(diff), 0.0)            # (B,nc,Qi,Qj,H)
+    scores = jnp.einsum("bcin,bcjn->bcij", cc, bc)         # (B,nc,Qi,Qj)
+    w_intra = scores[..., None] * decay * dtc[:, :, None, :, :]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp",
+                         w_intra, xc.astype(jnp.float32))
+
+    # --- chunk states ------------------------------------------------------
+    dec_out = jnp.exp(total[:, :, None, :] - cum)          # (B,nc,Q,H)
+    s_chunk = jnp.einsum("bcqh,bcqn,bcqhp->bchpn",
+                         dec_out * dtc, bc, xc.astype(jnp.float32))
+
+    # --- inter-chunk recurrence -------------------------------------------
+    def step(s_prev, inp):
+        tot_c, s_c = inp                                   # (B,H), (B,H,P,N)
+        s_new = jnp.exp(tot_c)[:, :, None, None] * s_prev + s_c
+        return s_new, s_prev                               # emit state BEFORE
+
+    tot_t = jnp.moveaxis(total, 1, 0)                      # (nc,B,H)
+    sc_t = jnp.moveaxis(s_chunk, 1, 0)                     # (nc,B,H,P,N)
+    state_f, s_prevs = lax.scan(step, state0, (tot_t, sc_t))
+    s_prevs = jnp.moveaxis(s_prevs, 0, 1)                  # (B,nc,H,P,N)
+
+    y_inter = jnp.einsum("bcqn,bchpn,bcqh->bcqhp",
+                         cc, s_prevs, jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(b, t, h, p)
+    return y, state_f
+
+
+def init_state(cfg: ModelConfig, batch: int) -> dict:
+    s = cfg.ssm
+    d_in, nh, p, n = dims(cfg)
+    return {
+        "ssd": jnp.zeros((batch, nh, p, n), jnp.float32),
+        "conv_x": jnp.zeros((batch, s.d_conv - 1, d_in), dtype_of(cfg)),
+        "conv_b": jnp.zeros((batch, s.d_conv - 1, n), dtype_of(cfg)),
+        "conv_c": jnp.zeros((batch, s.d_conv - 1, n), dtype_of(cfg)),
+    }
+
+
+def mamba_apply(cfg: ModelConfig, p: dict, x: jax.Array,
+                state: dict | None = None, return_state: bool = False):
+    """Full-sequence Mamba2.  x (B,T,d) -> (y (B,T,d), state | None)."""
+    b, t, _ = x.shape
+    d_in, nh, hp, n = dims(cfg)
+    st = state or init_state(cfg, b)
+
+    xs = x @ p["x_proj"]
+    z = x @ p["z_proj"]
+    bm = x @ p["b_proj"]
+    cm = x @ p["c_proj"]
+    dtv = x @ p["dt_proj"]
+
+    xs, tx = _causal_conv(xs, p["conv_x"], st["conv_x"])
+    bm, tb = _causal_conv(bm, p["conv_b"], st["conv_b"])
+    cm, tc = _causal_conv(cm, p["conv_c"], st["conv_c"])
+    xs, bm, cm = jax.nn.silu(xs), jax.nn.silu(bm), jax.nn.silu(cm)
+
+    dtv = jax.nn.softplus(dtv.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    xh = xs.reshape(b, t, nh, hp)
+
+    y, s_new = _ssd_chunked(xh, dtv, bm, cm, a, cfg.ssm.chunk, st["ssd"])
+    y = y + p["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, t, d_in).astype(x.dtype)
+    y = _gated_rmsnorm(y, z, p["gate_norm"])
+    out = y @ p["out_proj"]
+    if not return_state:
+        return out, None
+    return out, {"ssd": s_new, "conv_x": tx, "conv_b": tb, "conv_c": tc}
+
+
+def mamba_decode(cfg: ModelConfig, p: dict, x: jax.Array, state: dict):
+    """Single-token recurrent step.  x (B,1,d)."""
+    b = x.shape[0]
+    d_in, nh, hp, n = dims(cfg)
+
+    xs = x @ p["x_proj"]
+    z = x @ p["z_proj"]
+    bm = x @ p["b_proj"]
+    cm = x @ p["c_proj"]
+    dtv = x @ p["dt_proj"]
+
+    xs, tx = _causal_conv(xs, p["conv_x"], state["conv_x"])
+    bm, tb = _causal_conv(bm, p["conv_b"], state["conv_b"])
+    cm, tc = _causal_conv(cm, p["conv_c"], state["conv_c"])
+    xs, bm, cm = jax.nn.silu(xs), jax.nn.silu(bm), jax.nn.silu(cm)
+
+    dtv = jax.nn.softplus(dtv.astype(jnp.float32) + p["dt_bias"])[:, 0]
+    a = -jnp.exp(p["a_log"])
+    xh = xs.reshape(b, nh, hp).astype(jnp.float32)
+    bmf = bm[:, 0].astype(jnp.float32)
+    cmf = cm[:, 0].astype(jnp.float32)
+
+    decay = jnp.exp(dtv * a)                                  # (B,H)
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dtv, xh, bmf)
+    s_new = decay[:, :, None, None] * state["ssd"] + upd
+    y = jnp.einsum("bhpn,bn->bhp", s_new, cmf)
+    y = y + p["d_skip"][None, :, None] * xh
+    y = y.reshape(b, 1, d_in).astype(x.dtype)
+    y = _gated_rmsnorm(y, z, p["gate_norm"])
+    out = y @ p["out_proj"]
+    return out, {"ssd": s_new, "conv_x": tx, "conv_b": tb, "conv_c": tc}

@@ -1,0 +1,32 @@
+"""From-scratch optimizers + schedules (no optax in this container).
+
+Interface (optax-like but minimal)::
+
+    opt = sgd(lr=schedule, momentum=0.9, weight_decay=5e-4, nesterov=False)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+
+``lr`` may be a float or a ``step -> lr`` callable; the step counter lives in
+the optimizer state so the whole thing checkpoints as a pytree.  Optimizer
+state is kept in f32 regardless of the (possibly bf16) parameter dtype —
+the usual mixed-precision master-state arrangement.
+"""
+
+from repro.optim.optimizers import (OptState, Optimizer, adamw, apply_updates,
+                                    global_norm, sgd)
+from repro.optim.schedule import (constant, cosine_annealing,
+                                  cosine_with_warmup, exponential_decay)
+
+__all__ = [
+    "OptState",
+    "Optimizer",
+    "adamw",
+    "apply_updates",
+    "constant",
+    "cosine_annealing",
+    "cosine_with_warmup",
+    "exponential_decay",
+    "global_norm",
+    "sgd",
+]

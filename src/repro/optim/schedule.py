@@ -1,0 +1,46 @@
+"""Learning-rate schedules as pure ``step -> lr`` functions of a traced step.
+
+The paper (App. C.2) uses SGD momentum 0.9, weight decay 5e-4, initial lr
+0.01 and *cosine annealing per epoch* — ``cosine_annealing`` is that
+schedule, parameterized in steps.  All functions accept a jax scalar and are
+jit-safe.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    def f(step):
+        return jnp.float32(lr)
+    return f
+
+
+def cosine_annealing(lr: float, total_steps: int, final_scale: float = 0.0):
+    """SGDR-style cosine from ``lr`` down to ``final_scale * lr``."""
+    def f(step):
+        t = jnp.minimum(step.astype(jnp.float32), total_steps) / max(
+            total_steps, 1)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return jnp.float32(lr) * (final_scale + (1.0 - final_scale) * cos)
+    return f
+
+
+def cosine_with_warmup(lr: float, warmup_steps: int, total_steps: int,
+                       final_scale: float = 0.1):
+    """Linear warmup then cosine decay — the LM-pretraining default."""
+    cos = cosine_annealing(lr, max(total_steps - warmup_steps, 1), final_scale)
+
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = jnp.float32(lr) * s / max(warmup_steps, 1)
+        return jnp.where(s < warmup_steps, warm, cos(s - warmup_steps))
+    return f
+
+
+def exponential_decay(lr: float, decay_steps: int, rate: float = 0.5):
+    def f(step):
+        return jnp.float32(lr) * rate ** (step.astype(jnp.float32)
+                                          / decay_steps)
+    return f

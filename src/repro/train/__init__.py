@@ -1,0 +1,12 @@
+from repro.train.compression import (CompressionState, compress_with_feedback,
+                                     topk_sparsify)
+from repro.train.trainer import AdaptiveTrainer, TrainerConfig, TrainReport
+
+__all__ = [
+    "AdaptiveTrainer",
+    "CompressionState",
+    "TrainReport",
+    "TrainerConfig",
+    "compress_with_feedback",
+    "topk_sparsify",
+]

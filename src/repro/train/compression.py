@@ -1,0 +1,78 @@
+"""Top-k gradient compression with error feedback (opt-in, off by default).
+
+At 1000-node scale the gradient all-reduce can dominate step time for
+small-per-chip batch shapes; top-k sparsification with local error feedback
+(Stich et al. 2018; Lin et al. 2018 "Deep Gradient Compression") cuts the
+payload by 10-100x while provably preserving SGD convergence (the residual
+is re-injected next step, so nothing is lost, only delayed).
+
+Caveat (tested): apply EF-TopK BEFORE a momentum optimizer only with care —
+naive momentum amplifies the delayed error-feedback bursts (DGC's fix is
+momentum correction: accumulate momentum*velocity inside the compressor).
+The trainer applies compression to the raw gradient and lets the optimizer
+see the sparse stream; for momentum runs prefer lower density or the
+momentum-corrected variant.
+
+Wire format: per leaf, (values (k,), flat indices (k,)) — what a custom
+collective would ship.  ``compress_with_feedback`` also returns the dense
+"what the other side reconstructs" tensor so the trainer can run entirely
+dense when the transport is XLA's all-reduce (this container), keeping the
+semantics identical to a real sparse transport.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressionState(NamedTuple):
+    residual: Any   # pytree like grads: error feedback accumulator (f32)
+
+
+def init_state(grads: Any) -> CompressionState:
+    return CompressionState(jax.tree_util.tree_map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads))
+
+
+def topk_sparsify(x: jax.Array, frac: float) -> tuple[jax.Array, jax.Array,
+                                                      jax.Array]:
+    """Keep the top-``frac`` fraction of entries by |value|.
+
+    Returns (dense_masked, values, indices); k >= 1 always.
+    """
+    flat = x.reshape(-1).astype(jnp.float32)
+    k = max(int(flat.shape[0] * frac), 1)
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    keep_vals = flat[idx]
+    dense = jnp.zeros_like(flat).at[idx].set(keep_vals)
+    return dense.reshape(x.shape), keep_vals, idx
+
+
+def compress_with_feedback(
+    grads: Any, state: CompressionState, frac: float = 0.01
+) -> tuple[Any, CompressionState]:
+    """EF-TopK: compress (grad + residual); residual keeps what was dropped.
+
+    Returns (dense compressed grads, new state).  Applying the returned
+    grads through any optimizer reproduces the sparse-transport training
+    trajectory exactly.
+    """
+
+    def one(g, r):
+        acc = g.astype(jnp.float32) + r
+        dense, _, _ = topk_sparsify(acc, frac)
+        return dense, acc - dense
+
+    pairs = jax.tree_util.tree_map(one, grads, state.residual)
+    is_t = lambda x: isinstance(x, tuple)  # noqa: E731
+    comp = jax.tree_util.tree_map(lambda t: t[0], pairs, is_leaf=is_t)
+    resid = jax.tree_util.tree_map(lambda t: t[1], pairs, is_leaf=is_t)
+    return comp, CompressionState(resid)
+
+
+def compression_ratio(frac: float) -> float:
+    """Payload ratio of (values+int32 indices) vs dense f32."""
+    return 2.0 * frac

@@ -1,0 +1,107 @@
+"""Checkpointing: atomicity, async, keep-K GC, reshard-on-restore."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (CheckpointManager, load_checkpoint,
+                              restore_sharded, save_checkpoint)
+from repro.checkpoint.checkpoint import latest_step
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "params": {"w": jax.random.normal(k, (8, 4)),
+                   "b": jnp.zeros((4,))},
+        "opt": {"step": jnp.int32(7),
+                "slots": {"w": jnp.ones((8, 4)), "b": jnp.ones((4,))}},
+        "meta": {"epoch": np.int64(3)},
+    }
+
+
+def _assert_tree_equal(a, b):
+    fa = jax.tree_util.tree_leaves(a)
+    fb = jax.tree_util.tree_leaves(b)
+    assert len(fa) == len(fb)
+    for x, y in zip(fa, fb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_roundtrip(tmp_path):
+    t = _tree()
+    save_checkpoint(str(tmp_path), 10, t)
+    got = load_checkpoint(str(tmp_path))
+    _assert_tree_equal(t, got)
+
+
+def test_latest_selection(tmp_path):
+    for s in (5, 20, 10):
+        save_checkpoint(str(tmp_path), s, _tree(s))
+    assert latest_step(str(tmp_path)) == 20
+    got = load_checkpoint(str(tmp_path))
+    _assert_tree_equal(_tree(20), got)
+
+
+def test_keep_k_gc(tmp_path):
+    for s in range(6):
+        save_checkpoint(str(tmp_path), s, _tree(s), keep=3)
+    steps = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert len(steps) == 3
+    assert steps[-1] == "step_0000000005"
+
+
+def test_crashed_tmp_ignored(tmp_path):
+    """A partial tmp dir (crash mid-write) must not corrupt restore."""
+    save_checkpoint(str(tmp_path), 1, _tree(1))
+    os.makedirs(tmp_path / "tmp.99.12345")
+    (tmp_path / "tmp.99.12345" / "arrays.npz").write_bytes(b"garbage")
+    got = load_checkpoint(str(tmp_path))
+    _assert_tree_equal(_tree(1), got)
+    # a later save GCs the stale tmp dir
+    save_checkpoint(str(tmp_path), 2, _tree(2), keep=5)
+    assert not any(d.startswith("tmp.") for d in os.listdir(tmp_path))
+
+
+def test_async_manager(tmp_path):
+    m = CheckpointManager(str(tmp_path), keep=2)
+    t = _tree(3)
+    m.save(100, t, blocking=False)
+    m.wait()
+    got = m.restore()
+    _assert_tree_equal(t, got)
+
+
+def test_async_overlapping_saves(tmp_path):
+    m = CheckpointManager(str(tmp_path), keep=2)
+    for s in range(4):
+        m.save(s, _tree(s), blocking=False)  # each save joins the previous
+    m.wait()
+    assert m.latest_step() == 3
+
+
+def test_restore_sharded_single_device(tmp_path):
+    t = _tree()
+    save_checkpoint(str(tmp_path), 1, t)
+    got = load_checkpoint(str(tmp_path))
+    dev = jax.devices()[0]
+    sh = jax.tree_util.tree_map(
+        lambda _: jax.sharding.SingleDeviceSharding(dev), got)
+    placed = restore_sharded(got, sh)
+    _assert_tree_equal(t, placed)
+    leaf = jax.tree_util.tree_leaves(placed)[0]
+    assert leaf.devices() == {dev}
+
+
+def test_snapshot_isolated_from_mutation(tmp_path):
+    """Async save snapshots at call time: later mutations don't leak in."""
+    m = CheckpointManager(str(tmp_path))
+    arr = np.ones((4,), np.float32)
+    m.save(1, {"a": arr}, blocking=False)
+    arr[:] = 7.0  # mutate after handing off
+    m.wait()
+    got = m.restore()
+    assert got["a"].sum() == 4.0  # the pre-mutation snapshot

@@ -1,0 +1,110 @@
+"""OMP solver correctness + the paper's theoretical invariants (Thm 2/3)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.omp import matching_error, omp_select, omp_select_per_class
+
+
+def _k(i):
+    return jax.random.PRNGKey(i)
+
+
+def test_recovers_planted_support():
+    """Target = positive combo of 5 rows of an incoherent G -> OMP finds
+    exactly those rows."""
+    g = jax.random.normal(_k(0), (200, 128))
+    g = g / jnp.linalg.norm(g, axis=1, keepdims=True)
+    support = jnp.array([3, 50, 77, 120, 199])
+    w_true = jnp.array([1.0, 2.0, 0.5, 1.5, 3.0])
+    target = w_true @ g[support]
+    idx, w, mask, err = omp_select(g, target, k=5, lam=1e-6)
+    assert set(np.asarray(idx).tolist()) == set(np.asarray(support).tolist())
+    assert float(err) < 1e-3
+
+
+def test_error_monotone_in_k():
+    """E_lambda(X_k) is non-increasing as the budget k grows (greedy
+    chain property of Alg. 2)."""
+    g = jax.random.normal(_k(1), (100, 64))
+    target = jnp.sum(g[:30], axis=0)
+    errs = [float(omp_select(g, target, k=k, lam=0.1)[3])
+            for k in (1, 2, 4, 8, 16, 32)]
+    for a, b in zip(errs, errs[1:]):
+        assert b <= a + 1e-5, errs
+
+
+def test_weights_nonnegative_and_masked():
+    g = jax.random.normal(_k(2), (64, 32))
+    target = jnp.sum(g, axis=0)
+    idx, w, mask, _ = omp_select(g, target, k=10, lam=0.5)
+    assert bool(jnp.all(w >= 0))
+    assert bool(jnp.all(jnp.where(~mask, w == 0, True)))
+    assert bool(jnp.all(jnp.where(~mask, idx == -1, idx >= 0)))
+
+
+def test_eps_stopping_short_circuits():
+    """If 2 rows reconstruct the target exactly, slots 3.. stay unused."""
+    g = jax.random.normal(_k(3), (50, 40))
+    target = g[7] * 2.0 + g[31] * 1.0
+    idx, w, mask, err = omp_select(g, target, k=10, lam=1e-8, eps=1e-6)
+    assert int(jnp.sum(mask)) <= 4  # 2 needed; tiny slack for regularizer
+    assert float(err) < 1e-4
+
+
+def test_no_duplicate_selections():
+    g = jax.random.normal(_k(4), (30, 16))
+    target = jnp.sum(g, axis=0)
+    idx, w, mask, _ = omp_select(g, target, k=20, lam=0.5)
+    sel = np.asarray(idx)[np.asarray(mask)]
+    assert len(sel) == len(set(sel.tolist()))
+
+
+def test_valid_mask_respected():
+    g = jax.random.normal(_k(5), (60, 32))
+    valid = jnp.arange(60) < 20
+    target = jnp.sum(g[:20], axis=0)
+    idx, w, mask, _ = omp_select(g, target, k=10, valid=valid)
+    sel = np.asarray(idx)[np.asarray(mask)]
+    assert (sel < 20).all()
+
+
+def test_matching_error_decreases_vs_random():
+    """OMP's Err is far below a random subset of the same size (paper
+    Table 9 ordering)."""
+    g = jax.random.normal(_k(6), (256, 64))
+    target = jnp.sum(g, axis=0)
+    idx, w, mask, _ = omp_select(g, target, k=32, lam=0.1)
+    e_omp = float(matching_error(g, target, idx, w, mask))
+    ridx = jax.random.permutation(_k(7), 256)[:32].astype(jnp.int32)
+    rmask = jnp.ones((32,), bool)
+    rw = jnp.full((32,), float(256 / 32), jnp.float32)  # unbiased scaling
+    e_rand = float(matching_error(g, target, ridx, rw, rmask))
+    assert e_omp < e_rand
+
+
+def test_per_class_selects_within_class():
+    g = jax.random.normal(_k(8), (120, 32))
+    labels = jnp.arange(120) % 3
+    onehot = jax.nn.one_hot(labels, 3, dtype=g.dtype)
+    targets = onehot.T @ g
+    idx, w, mask = omp_select_per_class(g, labels, targets, 3, 5)
+    idx_np, mask_np = np.asarray(idx), np.asarray(mask)
+    lab_np = np.asarray(labels)
+    for c in range(3):
+        block = idx_np[c * 5:(c + 1) * 5]
+        bm = mask_np[c * 5:(c + 1) * 5]
+        assert (lab_np[block[bm]] == c).all()
+
+
+def test_lambda_regularizes_weights():
+    """Larger lambda -> smaller ||w||^2 (Fig. 4g mechanism)."""
+    g = jax.random.normal(_k(9), (80, 48))
+    target = jnp.sum(g, axis=0)
+    norms = []
+    for lam in (1e-4, 0.5, 50.0):
+        _, w, _, _ = omp_select(g, target, k=16, lam=lam)
+        norms.append(float(jnp.sum(w ** 2)))
+    assert norms[0] >= norms[1] >= norms[2]

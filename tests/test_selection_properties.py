@@ -1,0 +1,124 @@
+"""Hypothesis property tests on the selection-system invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import selection as sel_lib
+from repro.core.craig import craig, pairwise_sim
+from repro.core.glister import glister
+from repro.core.gradmatch import expand_batch_selection, gradmatch
+from repro.core.omp import omp_select
+
+SETTINGS = dict(max_examples=15, deadline=None)
+
+
+def _g(seed, n, d):
+    return jax.random.normal(jax.random.PRNGKey(seed), (n, d))
+
+
+@given(seed=st.integers(0, 100), n=st.integers(8, 64), d=st.integers(4, 32),
+       k=st.integers(1, 8))
+@settings(**SETTINGS)
+def test_gradmatch_weights_normalized(seed, n, d, k):
+    sel = gradmatch(_g(seed, n, d), k=min(k, n))
+    s = float(jnp.sum(jnp.where(sel.mask, sel.weights, 0.0)))
+    assert abs(s - 1.0) < 1e-4
+    assert bool(jnp.all(sel.weights >= 0))
+
+
+@given(seed=st.integers(0, 100), n=st.integers(8, 48), d=st.integers(4, 16))
+@settings(**SETTINGS)
+def test_omp_err_nonincreasing_rounds(seed, n, d):
+    """Greedy chain: err after k rounds <= err after k-1 rounds."""
+    g = _g(seed, n, d)
+    t = jnp.sum(g, axis=0)
+    e_prev = None
+    for k in (1, 2, 4):
+        err = float(omp_select(g, t, k=k, lam=0.1)[3])
+        if e_prev is not None:
+            assert err <= e_prev + 1e-4
+        e_prev = err
+
+
+@given(seed=st.integers(0, 100), n=st.integers(6, 40), k=st.integers(1, 6))
+@settings(**SETTINGS)
+def test_craig_gain_monotone(seed, n, k):
+    """Facility-location objective is monotone: coverage grows with k."""
+    g = _g(seed, n, 8)
+    sim = pairwise_sim(g)
+    covs = []
+    for kk in range(1, min(k, n) + 1):
+        sel = craig(g, kk, sim=sim)
+        sel_idx = np.asarray(sel.indices)[np.asarray(sel.mask)]
+        cov = float(jnp.sum(jnp.max(sim[:, sel_idx], axis=1)))
+        covs.append(cov)
+    for a, b in zip(covs, covs[1:]):
+        assert b >= a - 1e-3
+
+
+@given(seed=st.integers(0, 100), n=st.integers(8, 40), k=st.integers(2, 8))
+@settings(**SETTINGS)
+def test_craig_weights_are_cluster_masses(seed, n, k):
+    g = _g(seed, n, 8)
+    sel = craig(g, min(k, n))
+    # normalized cluster sizes: sum to 1, each >= 0
+    s = float(jnp.sum(sel.weights))
+    assert abs(s - 1.0) < 1e-4
+    assert bool(jnp.all(sel.weights >= 0))
+
+
+@given(seed=st.integers(0, 100), n=st.integers(8, 40), k=st.integers(1, 8))
+@settings(**SETTINGS)
+def test_glister_unweighted_uniform(seed, n, k):
+    g = _g(seed, n, 8)
+    sel = glister(g, jnp.sum(g, 0), min(k, n))
+    kk = int(jnp.sum(sel.mask))
+    w = np.asarray(sel.weights)[np.asarray(sel.mask)]
+    np.testing.assert_allclose(w, np.full(kk, 1.0 / kk), rtol=1e-5)
+
+
+@given(seed=st.integers(0, 50), nb=st.integers(2, 8), bs=st.integers(2, 6),
+       kb=st.integers(1, 4))
+@settings(**SETTINGS)
+def test_pb_expansion_preserves_mass(seed, nb, bs, kb):
+    """Expanding a per-batch selection to examples keeps sum(w) == 1 and
+    maps batch j to examples [j*B, (j+1)*B)."""
+    n = nb * bs
+    g = _g(seed, n, 8)
+    from repro.core.gradmatch import gradmatch_pb
+    sel = gradmatch_pb(g, bs, min(kb, nb))
+    ex = expand_batch_selection(sel, bs, n)
+    s = float(jnp.sum(jnp.where(ex.mask, ex.weights, 0.0)))
+    assert abs(s - 1.0) < 1e-4
+    idx = np.asarray(ex.indices)[np.asarray(ex.mask)]
+    src = np.asarray(sel.indices)[np.asarray(sel.mask)]
+    assert set(idx // bs).issubset(set(src.tolist()))
+
+
+@given(seed=st.integers(0, 50))
+@settings(**SETTINGS)
+def test_select_dispatch_all_strategies(seed):
+    g = _g(seed, 32, 8)
+    labels = jnp.arange(32) % 4
+    for strat in sel_lib.STRATEGIES:
+        sel = sel_lib.select(strat, jax.random.PRNGKey(seed), g, k=8,
+                             labels=labels, num_classes=4, batch_size=4)
+        assert sel.indices.shape[0] >= 1
+        assert bool(jnp.all(sel.weights >= 0))
+
+
+def test_warm_start_split_matches_paper():
+    """kappa=1/2: T_s = T/2 subset epochs, T_f = T_s * budget full epochs —
+    equal compute halves (paper §4)."""
+    t_f, t_s = sel_lib.warm_start_epochs(300, 0.1, kappa=0.5)
+    assert t_s == 150 and t_f == 15
+    # compute parity: T_f full epochs == T_f/f subset-equivalents
+    assert abs(t_f / 0.1 - t_s) <= 1
+
+
+def test_selection_schedule_cadence():
+    sched = sel_lib.SelectionSchedule(select_every=20, warm_epochs=15)
+    fires = [e for e in range(100) if sched.is_selection_epoch(e)]
+    assert fires == [15, 35, 55, 75, 95]
