@@ -13,14 +13,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, time_fn
+from benchmarks.common import make_recorder, time_fn
 from repro.kernels import ref
-from repro.kernels.corr import corr
+from repro.kernels.corr import corr, corr_argmax
 from repro.kernels.lastlayer_grad import hidden_grad_fused, lastlayer_grad
 from repro.kernels.sqdist import sqdist
 
 
-def run(quick=False):
+def run(quick=False) -> list[dict]:
+    rows = []
+    record = make_recorder("kernel", rows)
+
     n, d, v, dh = (2048, 512, 1024, 256) if quick else (8192, 1024, 4096,
                                                         512)
     k = jax.random.PRNGKey(0)
@@ -29,15 +32,28 @@ def run(quick=False):
     t = time_fn(jax.jit(ref.corr_ref), g, r)
     err = float(jnp.max(jnp.abs(corr(g, r, interpret=True)
                                 - ref.corr_ref(g, r))))
-    emit("kernel", name="corr", n=n, d=d, ref_ms=round(t * 1e3, 2),
-         max_abs_err=f"{err:.2e}")
+    record(name="corr", n=n, d=d, ref_ms=round(t * 1e3, 2),
+           max_abs_err=f"{err:.2e}")
+
+    # fused OMP scores-and-argmax (incremental solver inner loop)
+    kc = 512 if quick else 1024
+    cc = jax.random.normal(jax.random.fold_in(k, 7), (n, kc))
+    w = jnp.abs(jax.random.normal(jax.random.fold_in(k, 8), (kc,)))
+    base = jax.random.normal(jax.random.fold_in(k, 9), (n,))
+    mask = jnp.arange(n) % 7 != 0
+    t = time_fn(jax.jit(ref.corr_argmax_ref), cc, w, base, mask)
+    gi, gv = corr_argmax(cc, w, base, mask, interpret=True)
+    ri, rv = ref.corr_argmax_ref(cc, w, base, mask)
+    err = abs(float(gv) - float(rv)) + float(int(gi) != int(ri))
+    record(name="corr_argmax", n=n, k=kc, ref_ms=round(t * 1e3, 2),
+           max_abs_err=f"{err:.2e}")
 
     a = jax.random.normal(k, (1024, d))
     t = time_fn(jax.jit(ref.sqdist_ref), a, a)
     err = float(jnp.max(jnp.abs(sqdist(a, a, interpret=True)
                                 - ref.sqdist_ref(a, a))))
-    emit("kernel", name="sqdist", n=1024, d=d, ref_ms=round(t * 1e3, 2),
-         max_abs_err=f"{err:.2e}")
+    record(name="sqdist", n=1024, d=d, ref_ms=round(t * 1e3, 2),
+           max_abs_err=f"{err:.2e}")
 
     h = jax.random.normal(k, (n, dh))
     z = jax.random.normal(jax.random.fold_in(k, 2), (n, 64))
@@ -46,8 +62,8 @@ def run(quick=False):
     got = lastlayer_grad(h, z, y, interpret=True)
     want = ref.lastlayer_grad_ref(h, z, y)
     err = max(float(jnp.max(jnp.abs(a - b))) for a, b in zip(got, want))
-    emit("kernel", name="lastlayer_grad", n=n, C=64,
-         ref_ms=round(t * 1e3, 2), max_abs_err=f"{err:.2e}")
+    record(name="lastlayer_grad", n=n, C=64,
+           ref_ms=round(t * 1e3, 2), max_abs_err=f"{err:.2e}")
 
     zz = jax.random.normal(jax.random.fold_in(k, 4), (256, v))
     yy = jax.random.randint(jax.random.fold_in(k, 5), (256,), 0, v)
@@ -62,12 +78,13 @@ def run(quick=False):
     err = float(jnp.max(jnp.abs(hidden_grad_fused(zz, yy, w,
                                                   interpret=True)
                                 - ref_hidden(zz, yy, w))))
-    emit("kernel", name="hidden_grad_fused", n=256, V=v,
-         ref_ms=round(t * 1e3, 2), max_abs_err=f"{err:.2e}")
+    record(name="hidden_grad_fused", n=256, V=v,
+           ref_ms=round(t * 1e3, 2), max_abs_err=f"{err:.2e}")
+    return rows
 
 
-def main(quick=False):
-    run(quick=quick)
+def main(quick=False) -> list[dict]:
+    return run(quick=quick)
 
 
 if __name__ == "__main__":

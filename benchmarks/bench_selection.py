@@ -4,19 +4,21 @@ Wall-clock of one selection round as the candidate pool grows.  The PB
 variant runs OMP on an n/B ground set, so its cost curve is ~B x flatter —
 the paper's central scaling trick.  Also times the distributed
 (shard_map) OMP path on the 1-device mesh for dispatch-overhead visibility.
+
+The non-PB ``gradmatch`` strategy is additionally timed against the dense
+reference OMP solver (``omp_method="dense"``, the seed formulation that
+re-gathers the active set and rebuilds the Gram every round) and the
+incremental/dense speedup is emitted per pool size — the headline number
+for the incremental-Gram rewrite (DESIGN.md §2).
 """
 
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, time_fn
+from benchmarks.common import make_recorder, time_fn
 from repro.core import selection as sel_lib
-from repro.core.distributed import sharded_gradmatch_pb
-from repro.launch.mesh import make_host_mesh
 
 
 def run(pool_sizes=(512, 2048, 8192), d=64, budget=0.1, batch=32,
@@ -24,7 +26,14 @@ def run(pool_sizes=(512, 2048, 8192), d=64, budget=0.1, batch=32,
     if quick:
         pool_sizes = (512, 2048)
     rows = []
-    mesh = make_host_mesh(1, 1)
+    record = make_recorder("selection_time", rows)
+
+    try:
+        from repro.core.distributed import sharded_gradmatch_pb
+        from repro.launch.mesh import make_host_mesh
+        mesh = make_host_mesh(1, 1)
+    except Exception:   # older jax without AxisType / shard_map
+        mesh = None
     for n in pool_sizes:
         g = jax.random.normal(jax.random.PRNGKey(n), (n, d))
         labels = jnp.arange(n) % 10
@@ -37,30 +46,41 @@ def run(pool_sizes=(512, 2048, 8192), d=64, budget=0.1, batch=32,
                                    batch_size=batch, per_class=False)
                 return s.weights
             t = time_fn(sel_once, warmup=1, iters=3)
-            row = dict(strategy=strategy, pool=n, k=k,
-                       ms=round(t * 1e3, 2))
-            emit("selection_time", **row)
-            rows.append(row)
+            record(strategy=strategy, pool=n, k=k, ms=round(t * 1e3, 2))
+            if strategy == "gradmatch":
+                t_inc = t
+        # dense reference OMP (seed solver) for the speedup headline
+        def dense_once(g=g, k=k):
+            return sel_lib.select("gradmatch", jax.random.PRNGKey(0), g, k,
+                                  labels=labels, num_classes=10,
+                                  batch_size=batch, per_class=False,
+                                  omp_method="dense").weights
+        t_dense = time_fn(dense_once, warmup=1, iters=3)
+        record(strategy="gradmatch-dense", pool=n, k=k,
+               ms=round(t_dense * 1e3, 2))
+        record(strategy="gradmatch-speedup", pool=n, k=k,
+               speedup=round(t_dense / max(t_inc, 1e-9), 2))
         # per-class decomposition (vmapped OMP)
         def per_class(g=g, k=k):
             return sel_lib.select("gradmatch", jax.random.PRNGKey(0), g, k,
                                   labels=labels, num_classes=10,
                                   batch_size=batch, per_class=True).weights
         t = time_fn(per_class, warmup=1, iters=3)
-        emit("selection_time", strategy="gradmatch-perclass", pool=n, k=k,
-             ms=round(t * 1e3, 2))
-        # distributed OMP (shard_map path)
-        def dist(g=g, k=k):
-            return sharded_gradmatch_pb(mesh, g, batch,
-                                        max(k // batch, 1)).weights
-        t = time_fn(dist, warmup=1, iters=3)
-        emit("selection_time", strategy="gradmatch-pb-sharded", pool=n,
-             k=k, ms=round(t * 1e3, 2))
+        record(strategy="gradmatch-perclass", pool=n, k=k,
+               ms=round(t * 1e3, 2))
+        if mesh is not None:
+            # distributed OMP (shard_map path)
+            def dist(g=g, k=k):
+                return sharded_gradmatch_pb(mesh, g, batch,
+                                            max(k // batch, 1)).weights
+            t = time_fn(dist, warmup=1, iters=3)
+            record(strategy="gradmatch-pb-sharded", pool=n, k=k,
+                   ms=round(t * 1e3, 2))
     return rows
 
 
-def main(quick=False):
-    run(quick=quick)
+def main(quick=False) -> list[dict]:
+    return run(quick=quick)
 
 
 if __name__ == "__main__":

@@ -1,11 +1,38 @@
-"""Shared benchmark plumbing: timing, CSV emission, standard dataset."""
+"""Shared benchmark plumbing: timing, CSV emission, JSON persistence,
+standard dataset."""
 
 from __future__ import annotations
 
+import json
+import pathlib
 import time
 from typing import Callable
 
 import jax
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def persist(name: str, rows: list[dict]) -> pathlib.Path:
+    """Write one section's result rows to ``BENCH_<name>.json`` at the repo
+    root.  The file is overwritten per run and committed, so the perf
+    trajectory across PRs lives in its git history (diff-able per PR)."""
+    path = REPO_ROOT / f"BENCH_{name}.json"
+    payload = {
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "backend": jax.default_backend(),
+        "rows": rows,
+    }
+    path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    return path
+
+
+def make_recorder(table: str, rows: list[dict]) -> Callable:
+    """emit() + collect into ``rows`` (the list persist() later writes)."""
+    def record(**fields):
+        emit(table, **fields)
+        rows.append(fields)
+    return record
 
 
 def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:

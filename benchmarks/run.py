@@ -5,7 +5,10 @@
 ``python -m benchmarks.run --only tradeoff,kernels``
 
 Emits ``table,key=value,...`` CSV lines (tee-able) and finishes with a
-paper-claims check summary.
+paper-claims check summary.  The ``kernels`` and ``selection`` sections
+additionally persist their result rows to ``BENCH_kernels.json`` /
+``BENCH_selection.json`` at the repo root so the perf trajectory is
+tracked across PRs.
 """
 
 from __future__ import annotations
@@ -13,6 +16,8 @@ from __future__ import annotations
 import argparse
 import time
 import traceback
+
+from benchmarks.common import persist
 
 SECTIONS = ("kernels", "grad_error", "selection", "tradeoff", "redundant",
             "ablations", "roofline")
@@ -26,13 +31,16 @@ def main(argv=None) -> int:
     only = set(filter(None, args.only.split(",")))
     failures = []
 
-    def section(name, fn):
+    def section(name, fn, persist_as=None):
         if only and name not in only:
             return
         print(f"\n### bench:{name}", flush=True)
         t0 = time.perf_counter()
         try:
-            fn()
+            rows = fn()
+            if persist_as and rows:
+                path = persist(persist_as, rows)
+                print(f"### bench:{name} -> {path}", flush=True)
             print(f"### bench:{name} done in "
                   f"{time.perf_counter() - t0:.1f}s", flush=True)
         except Exception:
@@ -43,9 +51,11 @@ def main(argv=None) -> int:
                             bench_kernels, bench_redundant,
                             bench_selection, bench_tradeoff, roofline)
 
-    section("kernels", lambda: bench_kernels.main(quick=args.quick))
+    section("kernels", lambda: bench_kernels.main(quick=args.quick),
+            persist_as="kernels")
     section("grad_error", lambda: bench_grad_error.main(quick=args.quick))
-    section("selection", lambda: bench_selection.main(quick=args.quick))
+    section("selection", lambda: bench_selection.main(quick=args.quick),
+            persist_as="selection")
     section("tradeoff", lambda: bench_tradeoff.main(quick=args.quick))
     section("redundant", lambda: bench_redundant.main(quick=args.quick))
     section("ablations", lambda: bench_ablations.main(quick=args.quick))

@@ -13,7 +13,6 @@ import numpy as np
 
 from repro.configs.paper import PaperHParams, mlp
 from repro.core.gradmatch import gradmatch
-from repro.core.omp import matching_error
 from repro.core.random_sel import random_select
 from repro.data.synthetic import make_classification, split
 from repro.train.trainer import AdaptiveTrainer, TrainerConfig

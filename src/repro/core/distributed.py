@@ -12,7 +12,10 @@ so per-round communication is ``O(d)`` (two scalars + one proxy vector),
 ``O(k * d)`` per selection round overall — negligible against a single
 training step, which is the paper's requirement that selection cost stays
 invisible at scale.  The small ``(k, k)`` NNLS is computed redundantly on
-every shard (replicated), avoiding another collective.
+every shard (replicated), avoiding another collective; its Gram and
+target-correlation buffers grow one row/col per round from the cached
+active rows (same incremental scheme as ``omp.omp_select``) instead of
+being rebuilt at ``O(k^2 d)`` each round.
 
 The whole solver is ONE ``shard_map`` with a ``fori_loop`` inside: no host
 round-trips, no per-round dispatch, works identically on the 512-way
@@ -31,7 +34,7 @@ from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.core.gradmatch import SelectionResult, _normalize
-from repro.core.omp import _nnls_active
+from repro.core.omp import _nnls_active_cached
 
 
 def sharded_omp_select(
@@ -64,14 +67,18 @@ def sharded_omp_select(
         neg_inf = jnp.float32(-jnp.inf)
 
         def body(t, carry):
-            indices, mask, weights, rows, residual, err = carry
+            (indices, mask, weights, rows, gram, absrow, tcorr, residual,
+             err) = carry
             # 1) local scores against the shared residual.
             scores = g_local @ residual                      # (n_local,)
-            taken = jnp.zeros((n_local,), bool)
-            local_slots = jnp.where(
-                (indices >= base) & (indices < base + n_local) & mask,
-                indices - base, 0)
-            taken = taken.at[local_slots].set(mask, mode="drop")
+            # Slots owned by other shards (or unused) point at the
+            # out-of-bounds sentinel n_local, dropped by the scatter —
+            # an in-bounds sentinel would spuriously mark local candidate
+            # 0 taken on multi-shard meshes.
+            own = (indices >= base) & (indices < base + n_local) & mask
+            local_slots = jnp.where(own, indices - base, n_local)
+            taken = jnp.zeros((n_local,), bool).at[local_slots].set(
+                own, mode="drop")
             scores = jnp.where(taken, neg_inf, scores)
             # 2) global argmax: pmax on value, pmin on index at max ties.
             best_local = jnp.argmax(scores).astype(jnp.int32)
@@ -87,29 +94,40 @@ def sharded_omp_select(
                 jnp.where(mine, row_local, jnp.zeros_like(row_local)), axis)
 
             grow = err > eps
+            growf = grow.astype(jnp.float32)
             indices = indices.at[t].set(jnp.where(grow, e, -1))
             mask = mask.at[t].set(grow)
-            rows = rows.at[t].set(
-                jnp.where(grow, g_e, jnp.zeros_like(g_e)))
-            # 4) replicated small NNLS on the active rows.
-            gram = rows @ rows.T
-            corr = rows @ tgt
-            weights = _nnls_active(gram, corr, mask, lam, nnls_iters)
+            g_e = g_e * growf
+            rows = rows.at[t].set(g_e)
+            # 4) grow the replicated Gram/target-correlation caches by one
+            #    row/col (O(k d), vs the O(k^2 d) rebuild they replace) and
+            #    re-solve the small NNLS on the cached buffers.
+            row_vals = jnp.where(mask, rows @ g_e, 0.0)
+            gram = gram.at[t, :].set(row_vals).at[:, t].set(row_vals)
+            absrow = jnp.where(mask, absrow + jnp.abs(row_vals), 0.0)
+            absrow = absrow.at[t].set(jnp.sum(jnp.abs(row_vals)))
+            tcorr = tcorr.at[t].set(jnp.dot(g_e, tgt))
+            weights = _nnls_active_cached(gram, absrow, rows, tcorr, mask,
+                                          lam, nnls_iters)
             approx = weights @ rows
             residual = tgt - approx
             err = jnp.sum(residual ** 2) + lam * jnp.sum(weights ** 2)
-            return indices, mask, weights, rows, residual, err
+            return (indices, mask, weights, rows, gram, absrow, tcorr,
+                    residual, err)
 
         init = (
             jnp.full((k,), -1, jnp.int32),
             jnp.zeros((k,), bool),
             jnp.zeros((k,), jnp.float32),
             jnp.zeros((k, d), jnp.float32),
+            jnp.zeros((k, k), jnp.float32),
+            jnp.zeros((k,), jnp.float32),
+            jnp.zeros((k,), jnp.float32),
             tgt,
             jnp.sum(tgt ** 2),
         )
-        indices, mask, weights, rows, residual, err = lax.fori_loop(
-            0, k, body, init)
+        out = lax.fori_loop(0, k, body, init)
+        indices, mask, weights, err = out[0], out[1], out[2], out[8]
         return indices, mask, weights, err
 
     mapped = jax.shard_map(

@@ -51,6 +51,7 @@ def gradmatch(
     eps: float = 1e-10,
     valid: jax.Array | None = None,
     corr_fn=None,
+    method: str = "incremental",       # OMP solver: "incremental" | "dense"
 ) -> SelectionResult:
     """Plain GRAD-MATCH on an explicit candidate gradient matrix."""
     if target is None:
@@ -59,7 +60,8 @@ def gradmatch(
         else:
             target = jnp.sum(grads * valid[:, None].astype(grads.dtype), axis=0)
     idx, w, mask, err = omp_lib.omp_select(
-        grads, target, k=k, lam=lam, eps=eps, valid=valid, corr_fn=corr_fn
+        grads, target, k=k, lam=lam, eps=eps, valid=valid, corr_fn=corr_fn,
+        method=method,
     )
     return SelectionResult(idx, _normalize(w, mask), mask, err)
 
@@ -71,13 +73,15 @@ def gradmatch_per_class(
     k: int,
     lam: float = 0.5,
     eps: float = 1e-10,
+    method: str = "incremental",
 ) -> SelectionResult:
     """Paper default: one OMP per class (vmapped), budget split evenly."""
     k_per_class = max(k // num_classes, 1)
     onehot = jax.nn.one_hot(labels, num_classes, dtype=grads.dtype)  # (n, C)
     targets = onehot.T @ grads                                       # (C, d)
     idx, w, mask = omp_lib.omp_select_per_class(
-        grads, labels, targets, num_classes, k_per_class, lam=lam, eps=eps
+        grads, labels, targets, num_classes, k_per_class, lam=lam, eps=eps,
+        method=method,
     )
     # Per-class weights each sum to ~their class share; renormalize globally.
     return SelectionResult(idx, _normalize(w, mask), mask, jnp.float32(0.0))
@@ -91,6 +95,7 @@ def gradmatch_pb(
     eps: float = 1e-10,
     target: jax.Array | None = None,
     corr_fn=None,
+    method: str = "incremental",
 ) -> SelectionResult:
     """GRAD-MATCHPB: ground set = mini-batches (paper S3, 'PB' variant)."""
     pb = proxy_lib.per_batch(example_proxies, batch_size)
@@ -98,7 +103,7 @@ def gradmatch_pb(
         # Sum of *batch* gradients approximates the full gradient / B.
         target = jnp.sum(pb, axis=0)
     return gradmatch(pb, k=k_batches, target=target, lam=lam, eps=eps,
-                     corr_fn=corr_fn)
+                     corr_fn=corr_fn, method=method)
 
 
 def expand_batch_selection(

@@ -10,14 +10,44 @@ where ``g_i`` are candidate gradients (rows of ``G``, shape (n, d)) and
 adds the candidate with the largest |residual correlation| and re-solves the
 (regularized, non-negative) least squares on the active set.
 
-Hardware adaptation (see DESIGN.md S3): the reference implementation in CORDS
-uses dynamic Python lists + scipy NNLS on CPU.  Here the whole solver is a
-fixed-iteration ``lax.fori_loop`` with a *padded* active set of static size k,
-so it jits, vmaps (per-class decomposition = leading batch axis) and runs
-sharded on a pod without host round-trips.
+Two solvers live here (see DESIGN.md §2):
 
-Weights are solved by projected-gradient non-negative ridge regression on the
-active set -- a small (k x k) problem solved in VMEM-resident registers.
+``omp_select`` (default ``method="incremental"``)
+    The production path.  Cross-round state is cached so nothing is ever
+    recomputed from scratch:
+
+    * ``c0 = G @ g_tgt`` is computed once; a column cache ``C[:, t] = G @
+      g_{e_t}`` is extended by one column per round, so the per-round scores
+      are ``c0 - C @ w`` — the candidate matrix is touched once per round
+      for the single new column instead of a full residual matvec plus a
+      ``(k, d)`` active-set gather.
+    * the active-set Gram ``A = G_S G_S^T`` and target correlation ``c_S =
+      G_S g_tgt`` grow by one row/col per round (the new Gram row is a free
+      read out of the column cache: ``A[t, j] = C[e_t, j]``), and the NNLS
+      consumes these cached buffers — the ``(k, d)`` active matrix is never
+      re-materialized.
+    * the residual norm is tracked through the identity ``||r||^2 =
+      ||g_tgt||^2 - 2 w^T c_S + w^T A w``; it is evaluated in the factored
+      form ``||g_tgt - w^T R||^2`` over the cached active rows ``R`` (the
+      same value, but immune to the f32 cancellation that the expanded form
+      suffers when the residual is ~eps, which would defeat the early stop).
+    * rounds are processed in blocks with statically-growing prefix buffers,
+      so round ``t`` pays O(t)-sized matvecs rather than O(k)-sized ones.
+
+    Per-round cost: O(n·t) scores + O(n·d) new column + O(t·min(t, d)) per
+    NNLS iteration, versus the dense solver's O(t^2·d) Gram rebuild.
+
+``omp_select_dense`` (= ``method="dense"``)
+    The straightforward re-solve-from-scratch formulation (what CORDS does
+    with dynamic Python lists + scipy NNLS on CPU, here as a fixed-iteration
+    ``lax.fori_loop`` over a *padded* active set).  Kept as the reference
+    implementation: parity tests assert the incremental path reproduces its
+    selections to f32 tolerance, and benchmarks report the speedup.
+
+Both jit, vmap (per-class decomposition = leading batch axis) and run
+sharded on a pod without host round-trips.  Weights are solved by
+projected-gradient non-negative ridge regression on the active set — a
+small problem solved in VMEM-resident registers.
 """
 
 from __future__ import annotations
@@ -29,15 +59,38 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.kernels import ops
+
 
 class OMPState(NamedTuple):
-    """Carry for the OMP loop (all static shapes)."""
+    """Carry for the dense OMP loop (all static shapes)."""
 
     indices: jax.Array   # (k,) int32, selected candidate ids, -1 = unused slot
     mask: jax.Array      # (k,) bool, slot valid
     weights: jax.Array   # (k,) f32, non-negative weights for active slots
     residual: jax.Array  # (d,) f32, g_tgt - G_S^T w
     err: jax.Array       # () f32, current ||residual||^2 + lam*||w||^2
+
+
+class OMPIncState(NamedTuple):
+    """Carry for the incremental OMP loop.
+
+    ``indices``/``mask`` are full ``(k,)``; everything else is a prefix
+    buffer of the current block width P (grown between blocks, see
+    ``omp_select``), so early rounds pay O(t)-sized work.
+    """
+
+    indices: jax.Array   # (k,) int32
+    mask: jax.Array      # (k,) bool
+    weights: jax.Array   # (P,) f32
+    colcache: jax.Array  # (n, P) f32, C[:, t] = G @ g_{e_t} (wide regime)
+    gram: jax.Array      # (P, P) f32, active-set Gram (inactive rows/cols 0)
+    gram_absrow: jax.Array  # (P,) f32, sum_j |A_ij| over active j (cached
+                            # Gershgorin row sums for the NNLS step size)
+    tcorr: jax.Array     # (P,) f32, c_S[t] = g_{e_t} . g_tgt
+    rows: jax.Array      # (P, d) f32, cached active rows (zero when unused)
+    residual: jax.Array  # (d,) f32, g_tgt - w^T rows
+    err: jax.Array       # () f32
 
 
 def _nnls_active(
@@ -73,32 +126,46 @@ def _nnls_active(
     return lax.fori_loop(0, n_iters, body, w0)
 
 
-@functools.partial(
-    jax.jit, static_argnames=("k", "nnls_iters", "positive", "corr_fn")
-)
-def omp_select(
-    grads: jax.Array,          # (n, d) candidate gradients (rows)
-    target: jax.Array,         # (d,)   target gradient (full train or val)
-    k: int,
-    lam: float = 0.5,
-    eps: float = 1e-10,
-    nnls_iters: int = 50,
-    positive: bool = True,
-    valid: jax.Array | None = None,   # (n,) bool — candidate availability
-    corr_fn=None,              # optional kernel: (G, r) -> (n,) scores
-):
-    """Run OMP for exactly ``k`` rounds (slots beyond the eps-stop get masked).
+def _nnls_active_cached(
+    gram: jax.Array,         # (k, k) cached Gram, inactive rows/cols zero
+    gram_absrow: jax.Array,  # (k,) cached sum_j |A_ij| over active j
+    rows: jax.Array,         # (k, d) cached active rows, inactive rows zero
+    corr: jax.Array,         # (k,) cached c_S, inactive entries zero
+    mask: jax.Array,         # (k,) bool
+    lam: float,
+    n_iters: int,
+) -> jax.Array:
+    """Same math as ``_nnls_active``, consuming the incremental caches.
 
-    Returns (indices (k,), weights (k,), mask (k,), err ()).  Indices of
-    unused slots are -1 and their weights 0, so downstream consumers can use
-    the padded arrays directly (static shapes for jit).
+    The masked system matrix is never materialized: the step size comes from
+    the cached Gershgorin row sums (O(1) per round instead of O(k^2) per
+    call), and the matvec ``A @ w`` uses whichever factor is cheaper —
+    ``R (R^T w)`` at O(k·d) when d < k, or the cached ``(k, k)`` Gram at
+    O(k^2) when the proxy dimension dominates.
     """
-    n, d = grads.shape
-    grads = grads.astype(jnp.float32)
-    target = target.astype(jnp.float32)
-    if valid is None:
-        valid = jnp.ones((n,), dtype=bool)
+    m = mask.astype(rows.dtype)
+    c = corr * m
+    lip = jnp.maximum(jnp.max(m * (gram_absrow + lam)), 1e-6)
+    step = 1.0 / lip
+    k, d = rows.shape
+    use_factor = d < k  # static shapes -> trace-time choice
 
+    def body(_, w):
+        if use_factor:
+            aw = rows @ (w @ rows) + lam * w
+        else:
+            aw = gram @ w + lam * w
+        w = jnp.maximum(w - step * (aw - c), 0.0)
+        return w * m
+
+    w0 = jnp.zeros((k,), dtype=rows.dtype)
+    return lax.fori_loop(0, n_iters, body, w0)
+
+
+def _omp_select_dense(grads, target, k, lam, eps, nnls_iters, positive,
+                      valid, corr_fn):
+    """Reference solver: re-gather + re-solve the active set every round."""
+    n, d = grads.shape
     neg_inf = jnp.float32(-jnp.inf)
 
     def correlate(residual):
@@ -113,8 +180,10 @@ def omp_select(
             scores_sel = scores          # match direction of the target
         else:
             scores_sel = jnp.abs(scores)
+        # Unused slots point at the out-of-bounds sentinel n so mode="drop"
+        # discards them (an in-bounds sentinel would race duplicate writes).
         taken = jnp.zeros((n,), dtype=bool).at[
-            jnp.where(state.mask, state.indices, n - 1)
+            jnp.where(state.mask, state.indices, n)
         ].set(state.mask, mode="drop")
         scores_sel = jnp.where(valid & ~taken, scores_sel, neg_inf)
         e = jnp.argmax(scores_sel).astype(jnp.int32)
@@ -148,6 +217,178 @@ def omp_select(
     return out.indices, out.weights, out.mask, out.err
 
 
+def _grow_prefix(st: OMPIncState, width: int, keep_cols: bool) -> OMPIncState:
+    """Zero-pad the prefix buffers out to ``width`` slots (static).
+
+    ``keep_cols=False`` (narrow-proxy regime, see below) stops growing the
+    column cache — it is dead state from that block on.
+    """
+    pad = width - st.weights.shape[0]
+    return OMPIncState(
+        indices=st.indices,
+        mask=st.mask,
+        weights=jnp.pad(st.weights, (0, pad)),
+        colcache=(jnp.pad(st.colcache, ((0, 0), (0, pad))) if keep_cols
+                  else st.colcache),
+        gram=jnp.pad(st.gram, ((0, pad), (0, pad))),
+        gram_absrow=jnp.pad(st.gram_absrow, (0, pad)),
+        tcorr=jnp.pad(st.tcorr, (0, pad)),
+        rows=jnp.pad(st.rows, ((0, pad), (0, 0))),
+        residual=st.residual,
+        err=st.err,
+    )
+
+
+def _omp_select_incremental(grads, target, k, lam, eps, nnls_iters, positive,
+                            valid, block):
+    """Incremental-Gram OMP: cached correlations, no per-round rebuilds.
+
+    Two statically-chosen regimes per block of rounds, both O(t)-incremental
+    (the ``(k, d)`` active matrix is never re-gathered and the Gram never
+    rebuilt), differing only in which cached factor scores candidates:
+
+    * wide-proxy (P <= d): scores = c0 - C @ w over the ``(n, P)`` column
+      cache; the new Gram row is a free read ``C[e, :]``.  O(n·P) < O(n·d)
+      per round.
+    * narrow-proxy (d < P): scores = G @ r with the residual maintained
+      from the cached active rows (r = g_tgt - w^T R, O(P·d)); the new
+      Gram row is ``R @ g_e``.  O(n·d) < O(n·P) per round.
+
+    Both feed the same fused ``corr_argmax`` kernel (scores never hit HBM
+    on TPU): the wide call is (C, w, c0), the narrow call is (G, -r, 0).
+    """
+    n, d = grads.shape
+    c0 = ops.corr(grads, target)        # (n,), computed exactly once
+    zeros_n = jnp.zeros((n,), dtype=jnp.float32)
+    absolute = not positive
+
+    def make_body(use_cols: bool):
+        def body(t, st: OMPIncState):
+            p = st.weights.shape[0]     # static prefix width, t < p <= k
+            # 1) fused scores-and-argmax (one streaming pass, no (n,)
+            #    score vector materialized on TPU).
+            # Out-of-bounds sentinel for unused slots, dropped by the
+            # scatter — see the dense body for why n-1 would be wrong.
+            taken = jnp.zeros((n,), dtype=bool).at[
+                jnp.where(st.mask, st.indices, n)
+            ].set(st.mask, mode="drop")
+            avail = valid & ~taken
+            if use_cols:
+                e, _ = ops.corr_argmax(st.colcache, st.weights, c0, avail,
+                                       absolute=absolute)
+            else:
+                e, _ = ops.corr_argmax(grads, -st.residual, zeros_n, avail,
+                                       absolute=absolute)
+
+            # stop criterion E_lambda <= eps -> do not grow the active set.
+            grow = st.err > eps
+            growf = grow.astype(jnp.float32)
+            indices = st.indices.at[t].set(jnp.where(grow, e, -1))
+            mask = st.mask.at[t].set(grow)
+            mask_p = mask[:p]
+
+            # 2) extend the caches by one slot (updates are gated on `grow`
+            #    so a stopped solver leaves every buffer unchanged).
+            g_e = grads[e] * growf
+            rows = st.rows.at[t].set(g_e)
+            if use_cols:
+                # Single touch of G this round; the new Gram row is a free
+                # read out of the cache: A[t, j] = g_{e_t}.g_{e_j} = C[e, j].
+                colcache = st.colcache.at[:, t].set(ops.corr(grads, g_e))
+                row_vals = jnp.where(mask_p, colcache[e], 0.0) * growf
+            else:
+                colcache = st.colcache
+                row_vals = jnp.where(mask_p, rows @ g_e, 0.0)
+            gram = st.gram.at[t, :].set(row_vals).at[:, t].set(row_vals)
+            # Gershgorin row sums pick up the new row/col in O(p).
+            absrow = jnp.where(mask_p, st.gram_absrow + jnp.abs(row_vals),
+                               0.0)
+            absrow = absrow.at[t].set(jnp.sum(jnp.abs(row_vals)))
+            tcorr = st.tcorr.at[t].set(c0[e] * growf)
+
+            # 3) NNLS on the cached active-set buffers.
+            w = _nnls_active_cached(gram, absrow, rows, tcorr, mask_p, lam,
+                                    nnls_iters)
+            # ||r||^2 = ||g_tgt||^2 - 2 w^T c_S + w^T A w, evaluated in the
+            # factored form over cached rows (immune to the cancellation
+            # the expanded form suffers near the eps-stop).
+            resid = target - w @ rows
+            err = jnp.sum(resid**2) + lam * jnp.sum(w**2)
+            return OMPIncState(indices, mask, w, colcache, gram, absrow,
+                               tcorr, rows, resid, err)
+        return body
+
+    st = OMPIncState(
+        indices=jnp.full((k,), -1, dtype=jnp.int32),
+        mask=jnp.zeros((k,), dtype=bool),
+        weights=jnp.zeros((0,), dtype=jnp.float32),
+        colcache=jnp.zeros((n, 0), dtype=jnp.float32),
+        gram=jnp.zeros((0, 0), dtype=jnp.float32),
+        gram_absrow=jnp.zeros((0,), dtype=jnp.float32),
+        tcorr=jnp.zeros((0,), dtype=jnp.float32),
+        rows=jnp.zeros((0, d), dtype=jnp.float32),
+        residual=target,
+        err=jnp.sum(target**2) + jnp.float32(0.0),
+    )
+    for lo in range(0, k, block):
+        hi = min(lo + block, k)
+        use_cols = hi <= d
+        st = _grow_prefix(st, hi, keep_cols=use_cols)
+        st = lax.fori_loop(lo, hi, make_body(use_cols), st)
+    return st.indices, st.weights, st.mask, st.err
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "nnls_iters", "positive", "corr_fn", "method",
+                     "block"),
+)
+def omp_select(
+    grads: jax.Array,          # (n, d) candidate gradients (rows)
+    target: jax.Array,         # (d,)   target gradient (full train or val)
+    k: int,
+    lam: float = 0.5,
+    eps: float = 1e-10,
+    nnls_iters: int = 50,
+    positive: bool = True,
+    valid: jax.Array | None = None,   # (n,) bool — candidate availability
+    corr_fn=None,              # optional kernel: (G, r) -> (n,) scores
+    method: str = "incremental",      # "incremental" | "dense"
+    block: int = 128,          # rounds per statically-sized prefix block
+):
+    """Run OMP for exactly ``k`` rounds (slots beyond the eps-stop get masked).
+
+    Returns (indices (k,), weights (k,), mask (k,), err ()).  Indices of
+    unused slots are -1 and their weights 0, so downstream consumers can use
+    the padded arrays directly (static shapes for jit).
+
+    ``method="incremental"`` (default) runs the cached-correlation solver;
+    ``method="dense"`` runs the reference re-solve-from-scratch formulation.
+    A custom ``corr_fn`` scores against an explicit residual vector, which
+    only the dense formulation materializes, so it implies ``method="dense"``.
+    """
+    if method not in ("incremental", "dense"):
+        raise ValueError(f"unknown OMP method {method!r}")
+    n, d = grads.shape
+    grads = grads.astype(jnp.float32)
+    target = target.astype(jnp.float32)
+    if valid is None:
+        valid = jnp.ones((n,), dtype=bool)
+    if method == "dense" or corr_fn is not None:
+        return _omp_select_dense(grads, target, k, lam, eps, nnls_iters,
+                                 positive, valid, corr_fn)
+    return _omp_select_incremental(grads, target, k, lam, eps, nnls_iters,
+                                   positive, valid, block)
+
+
+def omp_select_dense(grads, target, k, lam=0.5, eps=1e-10, nnls_iters=50,
+                     positive=True, valid=None, corr_fn=None):
+    """Reference dense solver — parity oracle for ``omp_select``."""
+    return omp_select(grads, target, k, lam=lam, eps=eps,
+                      nnls_iters=nnls_iters, positive=positive, valid=valid,
+                      corr_fn=corr_fn, method="dense")
+
+
 def omp_select_per_class(
     grads: jax.Array,        # (n, d)
     labels: jax.Array,       # (n,) int class ids
@@ -156,6 +397,7 @@ def omp_select_per_class(
     k_per_class: int,
     lam: float = 0.5,
     eps: float = 1e-10,
+    method: str = "incremental",
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Paper's per-class decomposition, batched over classes with vmap.
 
@@ -166,7 +408,8 @@ def omp_select_per_class(
     def one_class(c, target):
         valid = labels == c
         idx, w, mask, _ = omp_select(
-            grads, target, k=k_per_class, lam=lam, eps=eps, valid=valid
+            grads, target, k=k_per_class, lam=lam, eps=eps, valid=valid,
+            method=method,
         )
         return idx, w, mask
 
@@ -178,8 +421,12 @@ def matching_error(
     grads: jax.Array, target: jax.Array, indices: jax.Array,
     weights: jax.Array, mask: jax.Array, lam: float = 0.0,
 ) -> jax.Array:
-    """Err_lambda for a given (X, w) — used by tests & benchmarks."""
+    """Err_lambda for a given (X, w) — used by tests & benchmarks.
+
+    Returns the paper's squared objective  ||G_S^T w - g_tgt||^2 +
+    lam ||w||^2, matching the ``err`` tracked inside ``omp_select``.
+    """
     sel = jnp.where(mask, indices, 0)
     g_s = grads[sel] * mask[:, None].astype(grads.dtype)
     resid = target - weights @ g_s
-    return jnp.sqrt(jnp.sum(resid**2)) + lam * jnp.sum(weights**2)
+    return jnp.sum(resid**2) + lam * jnp.sum(weights**2)

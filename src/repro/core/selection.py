@@ -45,12 +45,18 @@ def select(
     eps: float = 1e-10,
     val_target: Optional[jax.Array] = None,   # (d,) validation-gradient sum
     per_class: bool = True,
+    omp_method: str = "incremental",   # OMP solver for gradmatch strategies
 ) -> SelectionResult:
     """Resolve one selection round.  ``val_target`` switches isValid=True.
 
     PB variants interpret ``k`` as an example budget and convert it to
     ``k // batch_size`` mini-batches; their result indexes *batches* — use
     ``gm_lib.expand_batch_selection`` to map back to examples.
+
+    ``omp_method`` picks the OMP solver for the gradmatch strategies:
+    ``"incremental"`` (cached-correlation production path) or ``"dense"``
+    (the reference re-solve-from-scratch formulation, kept for parity tests
+    and benchmark baselines).
     """
     n = proxies.shape[0]
     if strategy == "full":
@@ -63,13 +69,14 @@ def select(
         if per_class and labels is not None and num_classes > 1 and (
                 val_target is None):
             return gm_lib.gradmatch_per_class(
-                proxies, labels, num_classes, k, lam=lam, eps=eps)
+                proxies, labels, num_classes, k, lam=lam, eps=eps,
+                method=omp_method)
         return gm_lib.gradmatch(proxies, k, target=val_target, lam=lam,
-                                eps=eps)
+                                eps=eps, method=omp_method)
     if strategy == "gradmatch-pb":
         return gm_lib.gradmatch_pb(
             proxies, batch_size, max(k // batch_size, 1), lam=lam, eps=eps,
-            target=val_target)
+            target=val_target, method=omp_method)
     if strategy == "craig":
         return craig_lib.craig(proxies, k)
     if strategy == "craig-pb":

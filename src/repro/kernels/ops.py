@@ -45,6 +45,24 @@ def corr(grads: jax.Array, residual: jax.Array) -> jax.Array:
     return corr_kernel.corr(grads, residual, interpret=(mode == "interpret"))
 
 
+def corr_argmax(colcache: jax.Array, w: jax.Array, base: jax.Array,
+                mask: jax.Array, *, absolute: bool = False
+                ) -> tuple[jax.Array, jax.Array]:
+    """Fused OMP scoring: masked argmax of  base - colcache @ w.
+
+    Returns (index (), score ()).  One streaming pass on TPU (the score
+    vector never hits HBM); the jnp reference materializes-then-argmaxes,
+    which XLA fuses well enough on CPU.
+    """
+    mode = _mode()
+    if mode == "ref":
+        return ref.corr_argmax_ref(colcache, w, base, mask,
+                                   absolute=absolute)
+    return corr_kernel.corr_argmax(colcache, w, base, mask,
+                                   absolute=absolute,
+                                   interpret=(mode == "interpret"))
+
+
 def sqdist(a: jax.Array, b: jax.Array) -> jax.Array:
     """Pairwise squared distances -> (n, m) f32."""
     mode = _mode()

@@ -17,6 +17,24 @@ def corr_ref(grads: jax.Array, residual: jax.Array) -> jax.Array:
     return grads.astype(jnp.float32) @ residual.astype(jnp.float32)
 
 
+def corr_argmax_ref(colcache: jax.Array, w: jax.Array, base: jax.Array,
+                    mask: jax.Array, absolute: bool = False
+                    ) -> tuple[jax.Array, jax.Array]:
+    """Masked argmax of  scores = base - colcache @ w  (incremental OMP).
+
+    colcache (n, k), w (k,), base (n,), mask (n,) bool ->
+    (argmax index i32 (), max score f32 ()).  Ties resolve to the lowest
+    index (jnp.argmax semantics); an all-False mask yields (0, -inf).
+    """
+    scores = base.astype(jnp.float32) - (
+        colcache.astype(jnp.float32) @ w.astype(jnp.float32))
+    if absolute:
+        scores = jnp.abs(scores)
+    scores = jnp.where(mask, scores, -jnp.inf)
+    idx = jnp.argmax(scores).astype(jnp.int32)
+    return idx, scores[idx]
+
+
 def sqdist_ref(a: jax.Array, b: jax.Array) -> jax.Array:
     """Pairwise squared euclidean distances  (n, d), (m, d) -> (n, m), f32.
 

@@ -11,7 +11,7 @@ import numpy as np
 import pytest
 
 from repro.kernels import ref
-from repro.kernels.corr import corr
+from repro.kernels.corr import corr, corr_argmax
 from repro.kernels.lastlayer_grad import hidden_grad_fused, lastlayer_grad
 from repro.kernels.sqdist import sqdist
 
@@ -37,6 +37,72 @@ def test_corr_matches_ref(n, d, dtype):
     want = ref.corr_ref(g, r)
     tol = 1e-4 if dtype == jnp.float32 else 2e-2
     np.testing.assert_allclose(got, want, rtol=tol, atol=tol * 10)
+
+
+# ---------------------------------------------------------------------------
+# corr_argmax: fused OMP scoring  argmax of  base - C @ w  (masked)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [1, 7, 128, 300])
+@pytest.mark.parametrize("kc", [1, 64, 512, 700])
+@pytest.mark.parametrize("absolute", [False, True])
+def test_corr_argmax_matches_ref(n, kc, absolute):
+    c = jax.random.normal(_key(n, kc, 20), (n, kc))
+    w = jax.random.normal(_key(n, kc, 21), (kc,))
+    base = jax.random.normal(_key(n, kc, 22), (n,)) * 3
+    mask = jax.random.bernoulli(_key(n, kc, 23), 0.7, (n,))
+    gi, gv = corr_argmax(c, w, base, mask, absolute=absolute,
+                         interpret=True)
+    ri, rv = ref.corr_argmax_ref(c, w, base, mask, absolute=absolute)
+    assert int(gi) == int(ri)
+    if np.isfinite(float(rv)):
+        np.testing.assert_allclose(float(gv), float(rv), rtol=1e-4,
+                                   atol=1e-4)
+    else:
+        assert float(gv) == float(rv)  # both -inf (mask emptied the pool)
+
+
+def test_corr_argmax_tie_breaks_to_lowest_index():
+    """Constant scores across rows (and across row tiles): both the kernel
+    and the ref must return the first unmasked index."""
+    n, kc = 400, 8
+    c = jnp.zeros((n, kc))
+    w = jnp.zeros((kc,))
+    base = jnp.full((n,), 1.5)
+    mask = jnp.ones((n,), bool).at[0].set(False).at[1].set(False)
+    gi, gv = corr_argmax(c, w, base, mask, interpret=True)
+    ri, rv = ref.corr_argmax_ref(c, w, base, mask)
+    assert int(gi) == int(ri) == 2
+    # tie inside a later row tile only
+    base2 = base.at[200].set(9.0).at[333].set(9.0)
+    gi2, _ = corr_argmax(c, w, base2, mask, interpret=True)
+    ri2, _ = ref.corr_argmax_ref(c, w, base2, mask)
+    assert int(gi2) == int(ri2) == 200
+
+
+def test_corr_argmax_all_masked():
+    """An all-False mask yields (0, -inf) — the OMP body relies on this
+    being in-range (the eps-stop gates the actual selection)."""
+    n, kc = 260, 16
+    c = jax.random.normal(_key(n, kc, 24), (n, kc))
+    w = jax.random.normal(_key(n, kc, 25), (kc,))
+    base = jax.random.normal(_key(n, kc, 26), (n,))
+    mask = jnp.zeros((n,), bool)
+    gi, gv = corr_argmax(c, w, base, mask, interpret=True)
+    ri, rv = ref.corr_argmax_ref(c, w, base, mask)
+    assert int(gi) == int(ri) == 0
+    assert float(gv) == float(rv) == -np.inf
+
+
+def test_corr_argmax_residual_form_matches_corr():
+    """The narrow-regime call (G, -r, 0) must equal argmax of corr(G, r)."""
+    g = jax.random.normal(_key(64, 96, 27), (64, 96))
+    r = jax.random.normal(_key(64, 96, 28), (96,))
+    mask = jnp.ones((64,), bool)
+    gi, gv = corr_argmax(g, -r, jnp.zeros((64,)), mask, interpret=True)
+    scores = ref.corr_ref(g, r)
+    assert int(gi) == int(jnp.argmax(scores))
+    np.testing.assert_allclose(float(gv), float(jnp.max(scores)), rtol=1e-4)
 
 
 # ---------------------------------------------------------------------------

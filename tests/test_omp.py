@@ -1,11 +1,14 @@
-"""OMP solver correctness + the paper's theoretical invariants (Thm 2/3)."""
+"""OMP solver correctness + the paper's theoretical invariants (Thm 2/3),
+plus incremental-vs-dense parity (the dense solver is the reference the
+production incremental path must reproduce, see DESIGN.md §2)."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.omp import matching_error, omp_select, omp_select_per_class
+from repro.core.omp import (matching_error, omp_select, omp_select_dense,
+                            omp_select_per_class)
 
 
 def _k(i):
@@ -62,6 +65,20 @@ def test_no_duplicate_selections():
     assert len(sel) == len(set(sel.tolist()))
 
 
+@pytest.mark.parametrize("method", ["incremental", "dense"])
+def test_no_duplicate_when_last_candidate_selected(method):
+    """Regression: candidate n-1 selected early must stay masked out of
+    later rounds (the taken-mask scatter once used n-1 as its sentinel,
+    racing duplicate writes).  Few NNLS iters keep the residual correlated
+    with the taken row, which is what exposed the race."""
+    g = jax.random.normal(_k(44), (12, 8))
+    target = g[11] * 5.0 + jnp.sum(g, axis=0) * 0.1
+    idx, w, mask, _ = omp_select(g, target, k=6, nnls_iters=2,
+                                 method=method)
+    sel = np.asarray(idx)[np.asarray(mask)]
+    assert len(sel) == len(set(sel.tolist())), sel
+
+
 def test_valid_mask_respected():
     g = jax.random.normal(_k(5), (60, 32))
     valid = jnp.arange(60) < 20
@@ -97,6 +114,104 @@ def test_per_class_selects_within_class():
         block = idx_np[c * 5:(c + 1) * 5]
         bm = mask_np[c * 5:(c + 1) * 5]
         assert (lab_np[block[bm]] == c).all()
+
+
+# ---------------------------------------------------------------------------
+# incremental vs dense reference parity (DESIGN.md §2)
+# ---------------------------------------------------------------------------
+
+PARITY_SHAPES = [
+    (200, 32, 24),    # narrow regime (d < k): residual scoring
+    (100, 256, 16),   # wide regime (k < d): column-cache scoring
+    (64, 16, 40),     # k > n/2, heavy masking
+    (300, 128, 150),  # crosses the wide->narrow regime boundary
+]
+
+
+@pytest.mark.parametrize("n,d,k", PARITY_SHAPES)
+@pytest.mark.parametrize("lam", [1e-6, 0.3])
+def test_incremental_matches_dense(n, d, k, lam):
+    """The cached-correlation solver must reproduce the dense reference's
+    selections exactly and its weights/err to f32 tolerance."""
+    g = jax.random.normal(_k(n + d + k), (n, d))
+    target = jnp.sum(g, axis=0)
+    i1, w1, m1, e1 = omp_select(g, target, k=k, lam=lam)
+    i2, w2, m2, e2 = omp_select_dense(g, target, k=k, lam=lam)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_array_equal(np.asarray(m1), np.asarray(m2))
+    np.testing.assert_allclose(w1, w2, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(float(e1), float(e2), rtol=1e-4, atol=1e-5)
+
+
+def test_incremental_matches_dense_valid_mask():
+    g = jax.random.normal(_k(77), (120, 48))
+    valid = jax.random.bernoulli(_k(78), 0.4, (120,))
+    target = jnp.sum(jnp.where(valid[:, None], g, 0.0), axis=0)
+    i1, w1, m1, e1 = omp_select(g, target, k=16, lam=0.2, valid=valid)
+    i2, w2, m2, e2 = omp_select_dense(g, target, k=16, lam=0.2, valid=valid)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_allclose(w1, w2, rtol=1e-4, atol=1e-5)
+
+
+def test_incremental_matches_dense_negative_scores():
+    """positive=False (|scores| selection) parity."""
+    g = jax.random.normal(_k(79), (150, 32))
+    target = -jnp.sum(g[:40], axis=0)   # anti-aligned target
+    i1, w1, m1, e1 = omp_select(g, target, k=12, lam=0.1, positive=False)
+    i2, w2, m2, e2 = omp_select_dense(g, target, k=12, lam=0.1,
+                                      positive=False)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_allclose(w1, w2, rtol=1e-4, atol=1e-5)
+
+
+def test_incremental_block_size_invariant():
+    """The blocked prefix growth is an implementation detail: any block
+    size must yield the same selection."""
+    g = jax.random.normal(_k(80), (128, 24))
+    target = jnp.sum(g, axis=0)
+    ref = omp_select(g, target, k=33, lam=0.2, block=128)
+    for block in (1, 7, 33, 64):
+        got = omp_select(g, target, k=33, lam=0.2, block=block)
+        np.testing.assert_array_equal(np.asarray(got[0]),
+                                      np.asarray(ref[0]))
+        np.testing.assert_allclose(got[1], ref[1], rtol=1e-4, atol=1e-6)
+
+
+def test_per_class_incremental_matches_dense():
+    """The vmapped per-class decomposition agrees between solvers."""
+    g = jax.random.normal(_k(81), (120, 32))
+    labels = jnp.arange(120) % 3
+    onehot = jax.nn.one_hot(labels, 3, dtype=g.dtype)
+    targets = onehot.T @ g
+    i1, w1, m1 = omp_select_per_class(g, labels, targets, 3, 8)
+    i2, w2, m2 = omp_select_per_class(g, labels, targets, 3, 8,
+                                      method="dense")
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_array_equal(np.asarray(m1), np.asarray(m2))
+    np.testing.assert_allclose(w1, w2, rtol=1e-4, atol=1e-5)
+
+
+def test_incremental_eps_stop_matches_dense():
+    """Exact 2-row target: both solvers stop at the same round."""
+    g = jax.random.normal(_k(82), (50, 40))
+    target = g[7] * 2.0 + g[31] * 1.0
+    i1, w1, m1, e1 = omp_select(g, target, k=10, lam=1e-8, eps=1e-6)
+    i2, w2, m2, e2 = omp_select_dense(g, target, k=10, lam=1e-8, eps=1e-6)
+    np.testing.assert_array_equal(np.asarray(m1), np.asarray(m2))
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+
+
+def test_matching_error_consistent_with_solver_err():
+    """matching_error is the squared paper objective — it must equal the
+    err the solver tracks internally (both formulations)."""
+    g = jax.random.normal(_k(83), (90, 40))
+    target = jnp.sum(g, axis=0)
+    for method in ("incremental", "dense"):
+        idx, w, mask, err = omp_select(g, target, k=12, lam=0.3,
+                                       method=method)
+        ext = matching_error(g, target, idx, w, mask, lam=0.3)
+        np.testing.assert_allclose(float(ext), float(err), rtol=1e-4,
+                                   atol=1e-5)
 
 
 def test_lambda_regularizes_weights():
