@@ -10,6 +10,10 @@ reference OMP solver (``omp_method="dense"``, the seed formulation that
 re-gathers the active set and rebuilds the Gram every round) and the
 incremental/dense speedup is emitted per pool size — the headline number
 for the incremental-Gram rewrite (DESIGN.md §2).
+
+``run_streaming`` times the streaming block-OMP (DESIGN.md §4) against the
+in-memory incremental solver at pools up to 65536, recording wall-clock
+and peak-memory proxies (chunk + buffer bytes vs resident pool bytes).
 """
 
 from __future__ import annotations
@@ -79,8 +83,57 @@ def run(pool_sizes=(512, 2048, 8192), d=64, budget=0.1, batch=32,
     return rows
 
 
+def run_streaming(pool_sizes=(8192, 32768, 65536), d=64, k=512,
+                  chunk=4096, buffer_size=512, quick=False) -> list[dict]:
+    """Streaming block-OMP vs in-memory incremental (core/streaming.py).
+
+    Records wall-clock plus peak-memory proxies: the streaming path's
+    device-resident pool footprint is one chunk + the top-M buffer,
+    independent of n, versus the in-memory solver's full (n, d) pool.
+    """
+    import numpy as np
+
+    from repro.core import streaming as stream_lib
+    from repro.core.omp import omp_select
+
+    if quick:
+        pool_sizes = (8192,)
+        k = 128
+    rows = []
+    record = make_recorder("selection_stream", rows)
+    for n in pool_sizes:
+        g = np.asarray(jax.random.normal(jax.random.PRNGKey(n), (n, d)),
+                       np.float32)
+        target = jnp.sum(jnp.asarray(g), axis=0)
+        chunks = stream_lib.array_chunks(g, chunk)
+
+        def stream_once(chunks=chunks, target=target, k=k):
+            out = stream_lib.omp_select_streaming(
+                chunks, target, k, buffer_size=buffer_size)
+            jax.block_until_ready(out.weights)
+            return out
+
+        out = stream_once()                      # warm + stats
+        t_stream = time_fn(lambda: stream_once().weights, warmup=0, iters=3)
+
+        def inmem_once(g=g, target=target, k=k):
+            return omp_select(jnp.asarray(g), target, k=k)[1]
+
+        t_inmem = time_fn(inmem_once, warmup=1, iters=3)
+        record(strategy="gradmatch-stream", pool=n, k=k,
+               ms=round(t_stream * 1e3, 2), passes=out.stats.passes,
+               certified_rounds=out.stats.certified_rounds,
+               chunk_bytes=chunk * d * 4,
+               buffer_bytes=buffer_size * d * 4, pool_bytes=n * d * 4)
+        record(strategy="gradmatch-stream-inmem", pool=n, k=k,
+               ms=round(t_inmem * 1e3, 2), pool_bytes=n * d * 4)
+        record(strategy="gradmatch-stream-overhead", pool=n, k=k,
+               ratio=round(t_stream / max(t_inmem, 1e-9), 2))
+    return rows
+
+
 def main(quick=False) -> list[dict]:
-    return run(quick=quick)
+    return run(quick=quick) + run_streaming(quick=quick)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,112 @@
+"""CI parity gate (run after the differential tests, see ci.yml).
+
+Two checks, both against artifacts committed in the repo:
+
+1. **Streaming-vs-dense smoke at pool = 16384**: the streaming block-OMP
+   must select the identical subset as the dense oracle on a pool larger
+   than any unit-test shape (chunked 4096 at a 512-slot buffer, so the
+   multi-pass path is really exercised).
+2. **Perf regression**: re-times the incremental solver at the committed
+   ``BENCH_selection.json`` headline shape and fails if its slowdown
+   relative to the *dense* solver (timed in the same run, on the same
+   machine) regresses by more than 2x against the committed baseline's
+   incremental/dense ratio.  Normalizing by the dense solver makes the
+   gate machine-independent — CI runners are slower than the machine the
+   baseline was committed from, but both solvers slow down together (a
+   true regression to the dense path moves the ratio 15-30x).
+
+Exit code 0 = gate passed.  ``python -m benchmarks.parity_gate``
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import REPO_ROOT, time_fn
+
+REGRESSION_FACTOR = 2.0
+
+
+def check_streaming_parity(n=16384, d=64, k=128) -> bool:
+    from repro.core import streaming as stream_lib
+    from repro.core.omp import omp_select, omp_select_dense
+
+    g = np.asarray(jax.random.normal(jax.random.PRNGKey(7), (n, d)),
+                   np.float32)
+    target = jnp.sum(jnp.asarray(g), axis=0)
+    dense = omp_select_dense(jnp.asarray(g), target, k=k)
+    inc = omp_select(jnp.asarray(g), target, k=k)
+    out = stream_lib.omp_select_streaming(
+        stream_lib.array_chunks(g, 4096), target, k, buffer_size=512)
+    ok = True
+    for name, got in (("incremental", inc),
+                      ("streaming", (out.indices, out.weights, out.mask,
+                                     out.err))):
+        same_idx = np.array_equal(np.asarray(got[0]), np.asarray(dense[0]))
+        same_mask = np.array_equal(np.asarray(got[2]), np.asarray(dense[2]))
+        w_ok = np.allclose(np.asarray(got[1]), np.asarray(dense[1]),
+                           rtol=1e-4, atol=1e-5)
+        print(f"parity_gate,check={name}-vs-dense,pool={n},k={k},"
+              f"indices={same_idx},mask={same_mask},weights={w_ok}",
+              flush=True)
+        ok &= same_idx and same_mask and w_ok
+    print(f"parity_gate,check=stream-passes,passes={out.stats.passes},"
+          f"certified={out.stats.certified_rounds}", flush=True)
+    return ok
+
+
+def check_incremental_regression() -> bool:
+    from repro.core import selection as sel_lib
+
+    path = REPO_ROOT / "BENCH_selection.json"
+    if not path.exists():
+        print("parity_gate,check=regression,skipped=no-baseline", flush=True)
+        return True
+    rows = json.loads(path.read_text())["rows"]
+    by_pool = {}
+    for r in rows:
+        if "ms" in r and r.get("strategy") in ("gradmatch",
+                                               "gradmatch-dense"):
+            by_pool.setdefault(r["pool"], {})[r["strategy"]] = r
+    pools = [p for p, d in by_pool.items() if len(d) == 2]
+    if not pools:
+        print("parity_gate,check=regression,skipped=no-baseline-pair",
+              flush=True)
+        return True
+    n = max(pools)
+    inc_row, dense_row = by_pool[n]["gradmatch"], by_pool[n]["gradmatch-dense"]
+    k = inc_row["k"]
+    base_ratio = float(inc_row["ms"]) / float(dense_row["ms"])
+    g = jax.random.normal(jax.random.PRNGKey(n), (n, 64))
+    labels = jnp.arange(n) % 10
+
+    def once(method):
+        return sel_lib.select("gradmatch", jax.random.PRNGKey(0), g, k,
+                              labels=labels, num_classes=10,
+                              per_class=False, omp_method=method).weights
+
+    ms_inc = time_fn(lambda: once("incremental"), warmup=1, iters=3) * 1e3
+    ms_dense = time_fn(lambda: once("dense"), warmup=1, iters=2) * 1e3
+    ratio = ms_inc / ms_dense
+    ok = ratio <= REGRESSION_FACTOR * base_ratio
+    print(f"parity_gate,check=regression,pool={n},k={k},"
+          f"inc_ms={ms_inc:.2f},dense_ms={ms_dense:.2f},"
+          f"ratio={ratio:.4f},baseline_ratio={base_ratio:.4f},"
+          f"limit={REGRESSION_FACTOR}x,ok={ok}", flush=True)
+    return ok
+
+
+def main() -> int:
+    ok = check_streaming_parity()
+    ok &= check_incremental_regression()
+    print(f"parity_gate,{'PASS' if ok else 'FAIL'}", flush=True)
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -58,8 +58,11 @@ def craig(
         gains = jnp.sum(jnp.maximum(cover[:, None], sim), axis=0) - jnp.sum(
             cover
         )
+        # Unused slots point at the out-of-bounds sentinel n so mode="drop"
+        # discards them (an in-bounds sentinel races duplicate writes when
+        # candidate n-1 is genuinely selected — see omp.py).
         taken = jnp.zeros((n,), dtype=bool).at[
-            jnp.where(mask, indices, n - 1)
+            jnp.where(mask, indices, n)
         ].set(mask, mode="drop")
         gains = jnp.where(valid & ~taken, gains, neg_inf)
         e = jnp.argmax(gains).astype(jnp.int32)

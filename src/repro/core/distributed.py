@@ -175,6 +175,66 @@ def sharded_gradmatch_pb(
                               eps=eps)
 
 
+# ---------------------------------------------------------------------------
+# shard-parallel chunk scoring for streaming selection (core/streaming.py)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _pmap_scorer(m_loc: int, absolute: bool, need_norms: bool):
+    """pmap'd per-device top-m chunk scorer (plain pmap — no shard_map, so
+    it runs on older jax without AxisType; the shim note in DESIGN.md §3
+    does not apply here)."""
+    from repro.core.streaming import _score_chunk_impl
+
+    def local(chunk, ok, gids, offset, residual, sel_idx, sel_mask):
+        return _score_chunk_impl(chunk, ok, gids, offset, residual,
+                                 sel_idx, sel_mask, m_loc, absolute,
+                                 need_norms)
+
+    return jax.pmap(local, in_axes=(0, 0, 0, 0, None, None, None))
+
+
+def pmap_chunk_topm(chunk, pool_ok, gids, offset, residual, sel_idx,
+                    sel_mask, *, m: int, absolute: bool,
+                    need_norms: bool = True):
+    """Shard-parallel drop-in for ``streaming._score_chunk``.
+
+    Rows of the chunk are split across local devices; each computes its
+    local top-m, the host merges to the global chunk top-m.  Thresholds
+    are combined conservatively (max of local thresholds and the merged
+    boundary), so the certification bound stays safe.
+    """
+    from repro.core import streaming as stream_lib
+
+    ndev = jax.local_device_count()
+    c, d = chunk.shape
+    per = -(-c // ndev)
+    pad = per * ndev - c
+    if pad:
+        chunk = jnp.pad(jnp.asarray(chunk, jnp.float32), ((0, pad), (0, 0)))
+        pool_ok = jnp.pad(pool_ok, (0, pad))
+        gids = jnp.pad(gids, (0, pad), constant_values=-1)
+    m_loc = min(m, per)
+    # Shard s owns the contiguous id range [offset + s*per, offset+(s+1)*per)
+    offsets = offset + jnp.arange(ndev, dtype=jnp.int32) * per
+    vals, ids, rows, ok, cmax, cthresh = _pmap_scorer(
+        m_loc, absolute, need_norms)(
+        chunk.reshape(ndev, per, d), pool_ok.reshape(ndev, per),
+        gids.reshape(ndev, per), offsets, residual, sel_idx, sel_mask)
+    # host-side merge of the ndev local buffers down to the chunk top-m
+    mv = jnp.full((m,), -jnp.inf, jnp.float32)
+    mi = jnp.full((m,), -1, jnp.int32)
+    mr = jnp.zeros((m, d), jnp.float32)
+    mok = jnp.zeros((m,), bool)
+    for s in range(ndev):
+        mv, mi, mr, mok = stream_lib._merge_topm(
+            mv, mi, mr, mok, vals[s], ids[s], rows[s], ok[s], size=m)
+    thresh = jnp.max(cthresh)
+    if ndev * m_loc > m:           # merge itself dropped candidates
+        thresh = jnp.maximum(thresh, mv[m - 1])
+    return mv, mi, mr, mok, jnp.max(cmax), thresh
+
+
 def replicate(mesh: Mesh, x: jax.Array) -> jax.Array:
     return jax.device_put(x, NamedSharding(mesh, P()))
 

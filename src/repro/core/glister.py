@@ -39,8 +39,11 @@ def glister(
     def body(t, carry):
         indices, mask, v = carry
         scores = grads @ v
+        # Unused slots point at the out-of-bounds sentinel n so mode="drop"
+        # discards them (an in-bounds sentinel races duplicate writes when
+        # candidate n-1 is genuinely selected — see omp.py).
         taken = jnp.zeros((n,), dtype=bool).at[
-            jnp.where(mask, indices, n - 1)
+            jnp.where(mask, indices, n)
         ].set(mask, mode="drop")
         scores = jnp.where(valid & ~taken, scores, neg_inf)
         e = jnp.argmax(scores).astype(jnp.int32)

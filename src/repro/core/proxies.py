@@ -96,6 +96,25 @@ def random_project(x: jax.Array, out_dim: int, seed: int = 0) -> jax.Array:
     return (x.astype(jnp.float32) @ proj) / jnp.sqrt(jnp.float32(out_dim))
 
 
+def proxy_chunk_stream(pool_iter, proxy_fn, params, pick: str = "bias"):
+    """Adapt a raw-data chunk iterator into a proxy chunk factory.
+
+    ``pool_iter`` is a re-iterable factory yielding ``(x, y, offset)`` (see
+    ``data.loader.ChunkedPool``); ``proxy_fn(params, x, y)`` returns
+    ``(per_class_proxy, bias_proxy)`` (``train.steps.make_proxy_fn``).  The
+    returned factory yields ``(proxy_chunk, None)`` pairs in the protocol
+    ``core.streaming.omp_select_streaming`` consumes — proxies for one
+    chunk at a time, so the full ``(n, d)`` proxy matrix never exists.
+    """
+    which = {"per_class": 0, "bias": 1}[pick]
+
+    def chunks():
+        for x, y, _ in pool_iter():
+            yield proxy_fn(params, x, y)[which], None
+
+    return chunks
+
+
 def per_batch(proxies: jax.Array, batch_size: int) -> jax.Array:
     """Group per-example proxies into per-mini-batch (PB) proxies.
 

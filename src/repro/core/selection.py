@@ -27,10 +27,11 @@ from repro.core import glister as glister_lib
 from repro.core import gradmatch as gm_lib
 from repro.core import proxies as proxy_lib
 from repro.core import random_sel
+from repro.core import streaming as stream_lib
 from repro.core.gradmatch import SelectionResult
 
-STRATEGIES = ("gradmatch", "gradmatch-pb", "craig", "craig-pb", "glister",
-              "random", "full")
+STRATEGIES = ("gradmatch", "gradmatch-stream", "gradmatch-pb", "craig",
+              "craig-pb", "glister", "random", "full")
 
 
 def select(
@@ -46,6 +47,8 @@ def select(
     val_target: Optional[jax.Array] = None,   # (d,) validation-gradient sum
     per_class: bool = True,
     omp_method: str = "incremental",   # OMP solver for gradmatch strategies
+    chunk_size: int = 2048,            # gradmatch-stream: pool chunk rows
+    stream_buffer: int = 256,          # gradmatch-stream: top-M buffer slots
 ) -> SelectionResult:
     """Resolve one selection round.  ``val_target`` switches isValid=True.
 
@@ -57,6 +60,13 @@ def select(
     ``"incremental"`` (cached-correlation production path) or ``"dense"``
     (the reference re-solve-from-scratch formulation, kept for parity tests
     and benchmark baselines).
+
+    ``"gradmatch-stream"`` runs the certified-exact streaming block-OMP
+    (``core/streaming.py``) over the proxies chunked by ``chunk_size`` —
+    the same subset as ``"gradmatch"`` with pooled (non-per-class) OMP, at
+    ``O(chunk + stream_buffer·d)`` peak pool memory.  Callers with a truly
+    out-of-core pool should use ``streaming.gradmatch_streaming`` directly
+    with a chunk factory (the trainer does).
     """
     n = proxies.shape[0]
     if strategy == "full":
@@ -73,6 +83,10 @@ def select(
                 method=omp_method)
         return gm_lib.gradmatch(proxies, k, target=val_target, lam=lam,
                                 eps=eps, method=omp_method)
+    if strategy == "gradmatch-stream":
+        return stream_lib.gradmatch_streaming_array(
+            proxies, k, target=val_target, lam=lam, eps=eps,
+            chunk_size=chunk_size, buffer_size=stream_buffer)
     if strategy == "gradmatch-pb":
         return gm_lib.gradmatch_pb(
             proxies, batch_size, max(k // batch_size, 1), lam=lam, eps=eps,

@@ -1,0 +1,419 @@
+"""Streaming block-OMP selection over out-of-core candidate pools.
+
+``omp_select`` (core/omp.py) holds the whole ``(n, d)`` proxy pool in
+memory and touches it every round.  This module selects from pools that do
+NOT fit: the pool is consumed through a re-iterable *chunk factory* (a
+callable returning a fresh iterator of ``(chunk, valid)`` pairs in a fixed
+order — e.g. ``array_chunks`` over an ``np.memmap``, or a per-chunk proxy
+extractor, see ``data/loader.ChunkedPool`` + ``core/proxies``), so peak
+pool-dependent memory is ``O(chunk + M·d)`` for a top-``M`` candidate
+buffer — independent of the pool size ``n``.  (The active-set state is
+``O(k·d + k²)``, exactly as in-memory OMP.)
+
+The solver is *certified-exact*: it selects the identical subset the
+in-memory incremental solver would (the differential tests in
+``tests/test_omp_parity.py`` assert index-exact parity, with the dense
+solver as the common oracle).  Per **pass** over the pool:
+
+  1. every chunk is scored against the carried residual (``ops.corr``) and
+     reduced to its top-``m`` candidates (values, global ids, rows);
+  2. chunk buffers are merged into a global top-``M`` buffer ordered by
+     ``(score desc, id asc)`` — ties resolve to the lowest global index,
+     matching ``jnp.argmax`` semantics of the in-memory solver;
+  3. incremental-Gram OMP rounds run over the buffer (scored by the fused
+     ``ops.corr_argmax`` kernel) for as long as a screening bound proves
+     the buffer argmax is the *global* argmax:  every row outside the
+     buffer had pass-score ≤ T (the buffer's admission threshold), so its
+     score against the drifted residual ``r`` is at most
+     ``T + gmax·‖r − r0‖`` (Cauchy-Schwarz, ``gmax`` = max row norm).  The
+     first round of a pass has ``r == r0`` and is always exact.  When the
+     bound fails, the pass ends and the pool is rescanned against the new
+     residual.
+
+Worst case (adversarial residual drift) is one selection per pass —
+``O(n·d)`` scoring flops per round, the same as the in-memory solver's
+narrow regime, paid through chunked streaming reads instead of a resident
+pool.  Structured pools (M ≥ #competitive candidates, duplicate-heavy
+pools, ``k ≥ n`` tails) certify many rounds per pass.
+
+The NNLS re-solve consumes the same cached Gram / Gershgorin / target-
+correlation buffers as ``omp.OMPIncState``, sliced to the identical
+``block``-quantized prefix widths, so weights match the in-memory solver
+to f32 tolerance.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Callable, Iterator, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.gradmatch import SelectionResult, _normalize
+from repro.core.omp import _nnls_active_cached
+from repro.kernels import ops
+
+_NEG_INF = jnp.float32(-jnp.inf)
+_BIG_ID = jnp.int32(2**31 - 1)
+
+
+# ---------------------------------------------------------------------------
+# chunk protocol
+# ---------------------------------------------------------------------------
+
+def array_chunks(pool, chunk_size: int, valid=None) -> Callable[[], Iterator]:
+    """Chunk factory over an ``(n, d)`` array (in-memory or ``np.memmap``).
+
+    Each call returns a fresh iterator of ``(chunk, valid_chunk)`` in the
+    same deterministic order — streaming selection makes several passes.
+    Rows are only touched one chunk at a time, so a memory-mapped pool is
+    never materialized.
+    """
+    n = pool.shape[0]
+    cs = int(chunk_size)
+
+    def chunks():
+        for lo in range(0, n, cs):
+            hi = min(lo + cs, n)
+            yield pool[lo:hi], (None if valid is None else valid[lo:hi])
+
+    return chunks
+
+
+def streaming_target(pool_iter: Callable[[], Iterator]):
+    """One pass: ``(sum of valid rows, total row count)`` — eq. (2) target."""
+    total = None
+    n = 0
+    for chunk, v in pool_iter():
+        c = jnp.asarray(chunk, jnp.float32)
+        if v is not None:
+            c = c * jnp.asarray(v)[:, None].astype(jnp.float32)
+        s = jnp.sum(c, axis=0)
+        total = s if total is None else total + s
+        n += chunk.shape[0]
+    if total is None:
+        raise ValueError("empty pool iterator")
+    return total, n
+
+
+def _bucket(c: int) -> int:
+    """Pad chunk length to the next power of two (bounds jit variants)."""
+    p = 8
+    while p < c:
+        p *= 2
+    return p
+
+
+# ---------------------------------------------------------------------------
+# jitted pieces (module-level so the jit cache persists across calls)
+# ---------------------------------------------------------------------------
+
+def _score_chunk_impl(chunk, pool_ok, gids, offset, residual, sel_idx,
+                      sel_mask, m: int, absolute: bool,
+                      need_norms: bool = True):
+    """Top-``m`` of one chunk against the carried residual.
+
+    Returns (vals (m,), ids (m,), rows (m, d), ok (m,), cmax (), cthresh ())
+    where ``cthresh`` upper-bounds the pass-score of every row this chunk
+    *dropped* (−inf when nothing real could have been dropped) and ``cmax``
+    is the max row norm — both feed the certification bound.  ``gmax`` is
+    frozen after the first pass, so later passes skip the norm reduction
+    (``need_norms=False`` returns 0 — the pool is static across passes).
+    """
+    c = chunk.shape[0]
+    scores = ops.corr(chunk, residual)                       # (c,)
+    s = jnp.abs(scores) if absolute else scores
+    # Chunk rows cover the contiguous id range [offset, offset+c), so the
+    # taken mask is an O(k) scatter, not an O(c*k) compare.  Slots owned by
+    # other chunks (or unused) point at the out-of-bounds sentinel c and
+    # are dropped — an in-bounds sentinel would race duplicate writes.
+    local = sel_idx - offset
+    inb = sel_mask & (local >= 0) & (local < c)
+    taken = jnp.zeros((c,), bool).at[
+        jnp.where(inb, local, c)].set(inb, mode="drop")
+    avail = pool_ok & ~taken
+    s_sel = jnp.where(avail, s, _NEG_INF)
+    vals, pos = lax.top_k(s_sel, m)                          # ties: low pos
+    if need_norms:
+        norms = jnp.sqrt(jnp.sum(chunk * chunk, axis=1))
+        cmax = jnp.max(jnp.where(pool_ok, norms, 0.0))
+    else:
+        cmax = jnp.float32(0.0)
+    cthresh = vals[m - 1] if chunk.shape[0] > m else _NEG_INF
+    return vals, gids[pos], chunk[pos], pool_ok[pos], cmax, cthresh
+
+
+_score_chunk = functools.partial(
+    jax.jit, static_argnames=("m", "absolute", "need_norms"))(
+        _score_chunk_impl)
+
+
+@functools.partial(jax.jit, static_argnames=("size",))
+def _merge_topm(bv, bi, br, bok, cv, ci, cr, cok, size: int):
+    """Merge two candidate buffers, keep top-``size`` by (score desc, id asc).
+
+    The explicit lexicographic order (padding ids last) is what makes the
+    buffer argmax reproduce ``jnp.argmax`` lowest-index tie-breaking
+    globally.
+    """
+    vals = jnp.concatenate([bv, cv])
+    ids = jnp.concatenate([bi, ci])
+    rows = jnp.concatenate([br, cr])
+    ok = jnp.concatenate([bok, cok])
+    id_order = jnp.where(ids >= 0, ids, _BIG_ID)
+    order = jnp.lexsort((id_order, -vals))[:size]
+    return vals[order], ids[order], rows[order], ok[order]
+
+
+@functools.partial(jax.jit, static_argnames=("absolute",))
+def _buffer_argmax(buf_rows, buf_ids, buf_ok, sel_idx, sel_mask, residual,
+                   absolute: bool):
+    """Fused score-and-argmax over the buffer (current residual).
+
+    The buffer is ordered by *pass-scan* score, so the kernel's
+    lowest-position tie-break is not lowest-global-id under a drifted
+    residual; exact ties are re-broken by id to match ``jnp.argmax`` over
+    the full pool (the all-masked degenerate resolves to the lowest id
+    too, mirroring the in-memory argmax-of-all--inf picking index 0).
+    """
+    taken = jnp.any(
+        (buf_ids[:, None] == sel_idx[None, :]) & sel_mask[None, :], axis=1)
+    avail = buf_ok & ~taken
+    zeros = jnp.zeros((buf_rows.shape[0],), jnp.float32)
+    pos0, maxv = ops.corr_argmax(buf_rows, -residual, zeros, avail,
+                                 absolute=absolute)
+    s = ops.corr(buf_rows, residual)
+    s = jnp.abs(s) if absolute else s
+    tie = jnp.where(avail, s, _NEG_INF) == maxv
+    cand = jnp.where(tie, jnp.where(buf_ids >= 0, buf_ids, _BIG_ID),
+                     _BIG_ID)
+    # If a backend's corr/corr_argmax accumulations disagree at the last
+    # bit, no tie matches — fall back to the kernel's own argmax.
+    pos = jnp.where(jnp.any(tie), jnp.argmin(cand), pos0)
+    return pos, buf_ids[pos], maxv
+
+
+@functools.partial(jax.jit, static_argnames=("p", "nnls_iters"))
+def _apply_selection(t, pos, buf_rows, indices, mask, rows, gram, absrow,
+                     tcorr, target, e, lam, p: int, nnls_iters: int):
+    """Grow the incremental-Gram state by slot ``t`` and re-solve weights.
+
+    Identical update to ``omp._omp_select_incremental``'s body, operating
+    on the ``[:p]`` prefix of full ``(k,)``-shaped buffers (``p`` follows
+    the same block-quantized growth schedule, so the NNLS sees bit-equal
+    inputs and the same d-vs-p factor choice).
+    """
+    g_e = buf_rows[pos]
+    indices = indices.at[t].set(e)
+    mask = mask.at[t].set(True)
+    rows = rows.at[t].set(g_e)
+    mask_p = mask[:p]
+    row_vals = jnp.where(mask_p, rows[:p] @ g_e, 0.0)
+    gram = gram.at[t, :p].set(row_vals).at[:p, t].set(row_vals)
+    ar = jnp.where(mask_p, absrow[:p] + jnp.abs(row_vals), 0.0)
+    ar = ar.at[t].set(jnp.sum(jnp.abs(row_vals)))
+    absrow = absrow.at[:p].set(ar)
+    tcorr = tcorr.at[t].set(jnp.dot(g_e, target))
+    w_p = _nnls_active_cached(gram[:p, :p], absrow[:p], rows[:p], tcorr[:p],
+                              mask_p, lam, nnls_iters)
+    weights = jnp.zeros((indices.shape[0],), jnp.float32).at[:p].set(w_p)
+    residual = target - w_p @ rows[:p]
+    err = jnp.sum(residual**2) + lam * jnp.sum(w_p**2)
+    return indices, mask, weights, rows, gram, absrow, tcorr, residual, err
+
+
+# ---------------------------------------------------------------------------
+# the streaming solver
+# ---------------------------------------------------------------------------
+
+@dataclass
+class StreamStats:
+    """Pass/round accounting for benchmarks and the harness tests."""
+    passes: int = 0
+    rounds: int = 0
+    certified_rounds: int = 0   # rounds certified with a drifted residual
+    chunks: int = 0
+    pool_size: int = 0
+
+
+class StreamingOMPResult(NamedTuple):
+    indices: jax.Array   # (k,) int32, -1 on unused slots
+    weights: jax.Array   # (k,) f32
+    mask: jax.Array      # (k,) bool
+    err: jax.Array       # () f32
+    stats: StreamStats
+
+
+def omp_select_streaming(
+    pool_iter: Callable[[], Iterator],   # factory of (chunk, valid) iters
+    target,                              # (d,) target gradient
+    k: int,
+    lam: float = 0.5,
+    eps: float = 1e-10,
+    nnls_iters: int = 50,
+    positive: bool = True,
+    buffer_size: int = 256,              # M — carried top-M candidate buffer
+    chunk_topm: Optional[int] = None,    # m per chunk (default: M)
+    block: int = 128,                    # NNLS prefix growth (parity w/ omp)
+    max_passes: Optional[int] = None,
+    score_chunk_fn=None,                 # hook: distributed.pmap_chunk_topm
+) -> StreamingOMPResult:
+    """OMP over a chunked pool; exact parity with ``omp_select``.
+
+    ``pool_iter()`` must yield the same chunks in the same order on every
+    call (the solver rescans when certification fails).  ``score_chunk_fn``
+    overrides the local chunk scorer with the same signature/returns as
+    ``_score_chunk`` — ``core.distributed.pmap_chunk_topm`` scores chunks
+    shard-parallel across local devices.
+    """
+    target = jnp.asarray(target, jnp.float32)
+    d = target.shape[0]
+    k = int(k)
+    m_cfg = int(chunk_topm) if chunk_topm is not None else int(buffer_size)
+    big_m = int(buffer_size)
+    absolute = not positive
+    scorer = score_chunk_fn if score_chunk_fn is not None else _score_chunk
+
+    indices = jnp.full((k,), -1, jnp.int32)
+    mask = jnp.zeros((k,), bool)
+    weights = jnp.zeros((k,), jnp.float32)
+    rows = jnp.zeros((k, d), jnp.float32)
+    gram = jnp.zeros((k, k), jnp.float32)
+    absrow = jnp.zeros((k,), jnp.float32)
+    tcorr = jnp.zeros((k,), jnp.float32)
+    residual = target
+    err = float(jnp.sum(target**2))
+    lam_f = jnp.float32(lam)
+
+    stats = StreamStats()
+    gmax = None
+    cap = int(max_passes) if max_passes is not None else k + 2
+    t = 0
+    while t < k and err > eps:
+        if stats.passes >= cap:
+            raise RuntimeError(
+                f"streaming OMP exceeded {cap} passes — is the pool "
+                "iterator stable across passes?")
+        # ---- scan pass: chunked top-m, merged into the top-M buffer ------
+        bv = jnp.full((big_m,), -jnp.inf, jnp.float32)
+        bi = jnp.full((big_m,), -1, jnp.int32)
+        br = jnp.zeros((big_m, d), jnp.float32)
+        bok = jnp.zeros((big_m,), bool)
+        # Device-scalar accumulators: no host sync inside the chunk loop.
+        thresh_d = jnp.float32(-jnp.inf)
+        gmax_d = jnp.float32(0.0)
+        offset = 0
+        for chunk, cvalid in pool_iter():
+            c = int(chunk.shape[0])
+            cpad = _bucket(c)
+            ch = jnp.asarray(chunk, jnp.float32)
+            pos_in = jnp.arange(cpad, dtype=jnp.int32)
+            if cpad != c:
+                ch = jnp.pad(ch, ((0, cpad - c), (0, 0)))
+            ok = pos_in < c
+            if cvalid is not None:
+                ok = ok & jnp.pad(jnp.asarray(cvalid, bool),
+                                  (0, cpad - c))
+            gids = jnp.where(pos_in < c, offset + pos_in, -1)
+            m_eff = min(m_cfg, cpad, big_m)
+            vals, ids, rws, rok, cmax, cthresh = scorer(
+                ch, ok, gids, jnp.int32(offset), residual, indices, mask,
+                m=m_eff, absolute=absolute, need_norms=gmax is None)
+            bv, bi, br, bok = _merge_topm(bv, bi, br, bok, vals, ids, rws,
+                                          rok, size=big_m)
+            thresh_d = jnp.maximum(thresh_d, cthresh)
+            gmax_d = jnp.maximum(gmax_d, cmax)
+            offset += c
+            stats.chunks += 1
+        if offset == 0:
+            break
+        stats.pool_size = offset
+        if gmax is None:
+            gmax = float(gmax_d)
+        # Rows dropped at the merge are bounded by the buffer's min value
+        # (−inf while the buffer is not full, i.e. nothing real dropped).
+        thresh = float(jnp.maximum(thresh_d, bv[big_m - 1]))
+        r0 = residual
+        # ---- certified rounds over the buffer ----------------------------
+        first = True
+        while t < k and err > eps:
+            pos, e, maxv = _buffer_argmax(br, bi, bok, indices, mask,
+                                          residual, absolute=absolute)
+            if not first:
+                drift = float(jnp.linalg.norm(residual - r0))
+                # Cauchy-Schwarz screening: any out-of-buffer row scores at
+                # most thresh + gmax*drift (small inflation absorbs f32
+                # rounding in the bound itself, on the safe side).
+                if not float(maxv) > thresh + gmax * drift * (1 + 1e-6):
+                    break
+                stats.certified_rounds += 1
+            p = min(k, block * (t // block + 1))
+            (indices, mask, weights, rows, gram, absrow, tcorr, residual,
+             err_t) = _apply_selection(
+                jnp.int32(t), pos, br, indices, mask, rows, gram, absrow,
+                tcorr, target, e, lam_f, p=p, nnls_iters=nnls_iters)
+            err = float(err_t)
+            t += 1
+            stats.rounds += 1
+            first = False
+        stats.passes += 1
+
+    return StreamingOMPResult(indices, weights, mask, jnp.float32(err),
+                              stats)
+
+
+# ---------------------------------------------------------------------------
+# GRAD-MATCH wrappers
+# ---------------------------------------------------------------------------
+
+def gradmatch_streaming(
+    pool_iter: Callable[[], Iterator],
+    k: int,
+    target=None,
+    lam: float = 0.5,
+    eps: float = 1e-10,
+    buffer_size: int = 256,
+    chunk_topm: Optional[int] = None,
+    score_chunk_fn=None,
+) -> SelectionResult:
+    """GRAD-MATCH over a chunked pool; target defaults to one summing pass."""
+    if target is None:
+        target, _ = streaming_target(pool_iter)
+    out = omp_select_streaming(
+        pool_iter, target, k, lam=lam, eps=eps, buffer_size=buffer_size,
+        chunk_topm=chunk_topm, score_chunk_fn=score_chunk_fn)
+    return SelectionResult(out.indices, _normalize(out.weights, out.mask),
+                           out.mask, out.err)
+
+
+def gradmatch_streaming_array(
+    proxies,                 # (n, d) array (in-memory or memmap)
+    k: int,
+    target=None,
+    valid=None,
+    lam: float = 0.5,
+    eps: float = 1e-10,
+    chunk_size: int = 2048,
+    buffer_size: int = 256,
+    score_chunk_fn=None,
+) -> SelectionResult:
+    """Streaming GRAD-MATCH over an explicit array, chunked on the fly.
+
+    The target matches ``gradmatch``'s (full-matrix sum) so the two paths
+    agree bit-for-bit on the pools the in-memory solver can hold.
+    """
+    if target is None:
+        g = jnp.asarray(proxies, jnp.float32)
+        if valid is None:
+            target = jnp.sum(g, axis=0)
+        else:
+            target = jnp.sum(g * jnp.asarray(valid)[:, None].astype(g.dtype),
+                             axis=0)
+    out = omp_select_streaming(
+        array_chunks(proxies, chunk_size, valid=valid), target, k, lam=lam,
+        eps=eps, buffer_size=buffer_size, score_chunk_fn=score_chunk_fn)
+    return SelectionResult(out.indices, _normalize(out.weights, out.mask),
+                           out.mask, out.err)

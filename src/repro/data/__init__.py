@@ -14,11 +14,12 @@ Two families:
 (X^t, w^t) with checkpointable iteration state.
 """
 
-from repro.data.loader import LoaderState, SubsetLoader
+from repro.data.loader import ChunkedPool, LoaderState, SubsetLoader
 from repro.data.synthetic import make_classification, make_imbalanced
 from repro.data.tokens import TokenStream, token_batch
 
 __all__ = [
+    "ChunkedPool",
     "LoaderState",
     "SubsetLoader",
     "TokenStream",

@@ -26,6 +26,40 @@ class LoaderState(NamedTuple):
     key: jax.Array       # PRNG key for the *next* permutation
 
 
+class ChunkedPool:
+    """Fixed-size, re-iterable chunk view over a host-resident dataset.
+
+    Feeds the streaming selection path (``core/streaming.py``): the pool is
+    read one ``chunk_size`` slice at a time in a deterministic order, and
+    every ``chunks()`` call restarts from offset 0 — streaming OMP rescans
+    the pool when its certification bound fails.  ``x``/``y`` may be
+    ``np.memmap`` (or any sliceable array), so an out-of-core pool is never
+    materialized in host or device memory.
+    """
+
+    def __init__(self, x, y=None, chunk_size: int = 4096):
+        self.x = x
+        self.y = y
+        self.chunk_size = int(chunk_size)
+
+    @property
+    def n(self) -> int:
+        return self.x.shape[0]
+
+    def num_chunks(self) -> int:
+        return -(-self.n // self.chunk_size)
+
+    def chunks(self) -> Iterator[tuple]:
+        """Yields ``(x_chunk, y_chunk, offset)``; ``y_chunk`` None if no y."""
+        for lo in range(0, self.n, self.chunk_size):
+            hi = min(lo + self.chunk_size, self.n)
+            yield (self.x[lo:hi],
+                   None if self.y is None else self.y[lo:hi], lo)
+
+    def __iter__(self) -> Iterator[tuple]:
+        return self.chunks()
+
+
 class SubsetLoader:
     """Mini-batches over the selected subset with weights.
 

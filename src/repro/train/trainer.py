@@ -29,9 +29,11 @@ import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.configs.paper import ClassifierConfig, PaperHParams
+from repro.core import proxies as proxy_lib
 from repro.core import selection as sel_lib
+from repro.core import streaming as stream_lib
 from repro.core.gradmatch import SelectionResult
-from repro.data.loader import SubsetLoader
+from repro.data.loader import ChunkedPool, SubsetLoader
 from repro.data.synthetic import Dataset
 from repro.optim import cosine_annealing, sgd
 from repro.train import steps as steps_lib
@@ -48,6 +50,9 @@ class TrainerConfig:
     hp: PaperHParams = field(default_factory=PaperHParams)
     is_valid: bool = False             # match validation gradients
     per_class: bool = True
+    omp_method: str = "incremental"    # OMP solver for gradmatch strategies
+    chunk_size: int = 1024             # gradmatch-stream: proxy chunk rows
+    stream_buffer: int = 256           # gradmatch-stream: top-M buffer slots
     seed: int = 0
     checkpoint_dir: Optional[str] = None
     checkpoint_every: int = 20
@@ -102,14 +107,27 @@ class AdaptiveTrainer:
         tc = self.tcfg
         n = self.train_ds.n
         k = max(int(n * tc.budget), 1)
-        pcg, bias = self.proxy_fn(params, self.train_ds.x, self.train_ds.y)
-        # PB variants & GLISTER use the bias-gradient proxy (comparable
-        # across classes); per-class GRAD-MATCH/CRAIG use the per-gradient
-        # proxy within each class (paper §4).
         val_target = None
         if tc.is_valid:
             _, vbias = self.proxy_fn(params, self.val_ds.x, self.val_ds.y)
             val_target = jnp.sum(vbias, axis=0)
+        if tc.strategy == "gradmatch-stream":
+            # Out-of-core path: proxies are extracted one chunk at a time
+            # through the chunked pool — the (n, d) proxy matrix never
+            # exists on host or device (core/streaming.py).
+            pool = ChunkedPool(self.train_ds.x, self.train_ds.y,
+                               tc.chunk_size)
+            chunks = proxy_lib.proxy_chunk_stream(pool.chunks,
+                                                  self.proxy_fn, params)
+            sel = stream_lib.gradmatch_streaming(
+                chunks, k, target=val_target, lam=tc.hp.lam, eps=tc.hp.eps,
+                buffer_size=tc.stream_buffer)
+            jax.block_until_ready(sel.weights)
+            return sel, time.perf_counter() - t0
+        pcg, bias = self.proxy_fn(params, self.train_ds.x, self.train_ds.y)
+        # PB variants & GLISTER use the bias-gradient proxy (comparable
+        # across classes); per-class GRAD-MATCH/CRAIG use the per-gradient
+        # proxy within each class (paper §4).
         per_class_ok = not tc.is_valid and tc.per_class
         proxies = pcg if (tc.strategy in ("gradmatch", "craig")
                           and per_class_ok) else bias
@@ -119,6 +137,8 @@ class AdaptiveTrainer:
             batch_size=tc.batch_size, lam=tc.hp.lam, eps=tc.hp.eps,
             val_target=val_target,
             per_class=per_class_ok,
+            omp_method=tc.omp_method,
+            chunk_size=tc.chunk_size, stream_buffer=tc.stream_buffer,
         )
         sel = sel_lib.expand_if_pb(tc.strategy, sel, tc.batch_size, n)
         jax.block_until_ready(sel.weights)

@@ -1,0 +1,214 @@
+"""Differential parity harness: incremental vs dense vs streaming OMP.
+
+The dense re-solve-from-scratch solver is the oracle (DESIGN.md §2); the
+incremental production solver and the streaming block-OMP (DESIGN.md §4)
+must select identical indices/masks and matching weights across a grid of
+(n, d, k, lam) including degenerate pools — duplicate rows, zero-gradient
+rows, k >= n, all-masked ``valid``.  Randomness is seeded ``numpy`` only
+(no hypothesis — the container cannot install it); streaming runs with a
+small buffer and a non-divisor chunk size so the multi-pass machinery and
+ragged-chunk padding are actually exercised.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import streaming as stream_lib
+from repro.core.omp import omp_select, omp_select_dense
+
+STREAM = dict(buffer_size=16, chunk_topm=8)
+CHUNK = 48   # deliberately not a divisor of the pool sizes below
+
+
+def _pool(seed, n, d):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal((n, d)).astype(np.float32)
+
+
+def _run_all_methods(g, target, k, lam, valid=None, positive=True,
+                     eps=1e-10):
+    g = jnp.asarray(g)
+    target = jnp.asarray(target, jnp.float32)
+    v = None if valid is None else jnp.asarray(valid)
+    inc = omp_select(g, target, k=k, lam=lam, eps=eps, valid=v,
+                     positive=positive)
+    dense = omp_select_dense(g, target, k=k, lam=lam, eps=eps, valid=v,
+                             positive=positive)
+    out = stream_lib.omp_select_streaming(
+        stream_lib.array_chunks(np.asarray(g), CHUNK, valid=valid),
+        target, k, lam=lam, eps=eps, positive=positive, **STREAM)
+    return inc, dense, (out.indices, out.weights, out.mask, out.err)
+
+
+def _assert_parity(a, b, what):
+    np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]),
+                                  err_msg=f"{what}: indices differ")
+    np.testing.assert_array_equal(np.asarray(a[2]), np.asarray(b[2]),
+                                  err_msg=f"{what}: masks differ")
+    np.testing.assert_allclose(np.asarray(a[1]), np.asarray(b[1]),
+                               rtol=1e-4, atol=1e-5,
+                               err_msg=f"{what}: weights differ")
+    np.testing.assert_allclose(float(a[3]), float(b[3]), rtol=1e-4,
+                               atol=1e-5, err_msg=f"{what}: err differs")
+
+
+GRID = [
+    # (seed, n, d, k)  — wide + narrow regimes, k crossing block boundaries
+    (0, 96, 12, 16),
+    (1, 160, 48, 24),
+    # narrow proxies, k > d (k kept below the round where an 8-dim residual
+    # reaches the f32 noise floor — beyond it every solver ranks noise)
+    (2, 200, 8, 16),
+    (3, 64, 32, 96),     # k > n
+]
+
+
+@pytest.mark.parametrize("seed,n,d,k", GRID)
+@pytest.mark.parametrize("lam", [1e-6, 0.3])
+def test_three_way_parity_random_pools(seed, n, d, k, lam):
+    g = _pool(seed, n, d)
+    target = g.sum(axis=0)
+    inc, dense, stream = _run_all_methods(g, target, k, lam)
+    _assert_parity(inc, dense, "incremental vs dense")
+    _assert_parity(stream, dense, "streaming vs dense")
+
+
+def test_parity_duplicate_rows():
+    """Exactly tied scores: lowest-index tie-breaking must agree."""
+    g = _pool(10, 80, 12)
+    g[1::2] = g[::2]                       # every row duplicated
+    target = g.sum(axis=0)
+    inc, dense, stream = _run_all_methods(g, target, k=24, lam=0.2)
+    _assert_parity(inc, dense, "incremental vs dense (duplicates)")
+    _assert_parity(stream, dense, "streaming vs dense (duplicates)")
+
+
+def test_parity_zero_gradient_rows():
+    g = _pool(11, 96, 16)
+    g[20:60] = 0.0
+    target = g.sum(axis=0)
+    inc, dense, stream = _run_all_methods(g, target, k=20, lam=0.1)
+    _assert_parity(inc, dense, "incremental vs dense (zero rows)")
+    _assert_parity(stream, dense, "streaming vs dense (zero rows)")
+    # zero rows are never useful picks while informative rows remain
+    sel = np.asarray(stream[0])[np.asarray(stream[2])]
+    assert not np.any((sel >= 20) & (sel < 60))
+
+
+def test_parity_k_exceeds_valid_pool():
+    """k >= #valid candidates: the taken-mask tail must agree exactly."""
+    g = _pool(12, 72, 10)
+    valid = np.arange(72) < 9
+    target = (g * valid[:, None]).sum(axis=0)
+    inc, dense, stream = _run_all_methods(g, target, k=32, lam=0.2,
+                                          valid=valid)
+    _assert_parity(inc, dense, "incremental vs dense (k >= n_valid)")
+    _assert_parity(stream, dense, "streaming vs dense (k >= n_valid)")
+
+
+def test_parity_all_masked_valid():
+    """Fully-masked pool: zero target -> immediate eps stop, empty subset."""
+    g = _pool(13, 64, 8)
+    valid = np.zeros((64,), bool)
+    target = (g * valid[:, None]).sum(axis=0)
+    inc, dense, stream = _run_all_methods(g, target, k=8, lam=0.2,
+                                          valid=valid)
+    _assert_parity(inc, dense, "incremental vs dense (all masked)")
+    _assert_parity(stream, dense, "streaming vs dense (all masked)")
+    assert int(np.asarray(stream[2]).sum()) == 0
+
+
+def test_parity_random_valid_mask():
+    rng = np.random.default_rng(14)
+    g = _pool(14, 120, 24)
+    valid = rng.random(120) < 0.4
+    target = (g * valid[:, None]).sum(axis=0)
+    inc, dense, stream = _run_all_methods(g, target, k=16, lam=0.2,
+                                          valid=valid)
+    _assert_parity(inc, dense, "incremental vs dense (valid mask)")
+    _assert_parity(stream, dense, "streaming vs dense (valid mask)")
+    sel = np.asarray(stream[0])[np.asarray(stream[2])]
+    assert valid[sel].all()
+
+
+def test_parity_absolute_scores():
+    g = _pool(15, 140, 20)
+    target = -(g[:40].sum(axis=0))         # anti-aligned target
+    inc, dense, stream = _run_all_methods(g, target, k=12, lam=0.1,
+                                          positive=False)
+    _assert_parity(inc, dense, "incremental vs dense (absolute)")
+    _assert_parity(stream, dense, "streaming vs dense (absolute)")
+
+
+def test_parity_eps_stop():
+    """Exact 2-row reconstruction: all solvers stop at the same round."""
+    g = _pool(16, 50, 40)
+    target = g[7] * 2.0 + g[31] * 1.0
+    inc, dense, stream = _run_all_methods(g, target, k=10, lam=1e-8,
+                                          eps=1e-6)
+    _assert_parity(inc, dense, "incremental vs dense (eps stop)")
+    _assert_parity(stream, dense, "streaming vs dense (eps stop)")
+    assert int(np.asarray(stream[2]).sum()) == 2
+
+
+# ---------------------------------------------------------------------------
+# scatter-sentinel regression (PR 1 fix): candidate n-1 in a late round
+# ---------------------------------------------------------------------------
+
+def _lastrow_pool(n=33, d=6):
+    """Pool where candidate n-1 is the best pick in round 2, not round 1.
+
+    Row 0 dominates the target; once it is taken and reweighted, the
+    residual is ~e1 and row n-1 (= e1) becomes the argmax.  The old
+    in-bounds sentinel (n-1) spuriously marked row n-1 taken via the
+    unused slots' duplicate writes, making it unselectable.
+    """
+    rng = np.random.default_rng(99)
+    g = 0.01 * rng.standard_normal((n, d)).astype(np.float32)
+    g[0, 0] = 10.0
+    g[n - 1] = 0.0
+    g[n - 1, 1] = 1.0
+    target = np.zeros((d,), np.float32)
+    target[0] = 20.0
+    target[1] = 3.0
+    return g, target
+
+
+@pytest.mark.parametrize("method", ["incremental", "dense"])
+def test_last_candidate_selectable_late_round(method):
+    g, target = _lastrow_pool()
+    n = g.shape[0]
+    idx, w, mask, _ = omp_select(jnp.asarray(g), jnp.asarray(target), k=4,
+                                 lam=1e-6, method=method)
+    sel = np.asarray(idx)[np.asarray(mask)]
+    assert n - 1 in sel.tolist(), sel
+    assert sel.tolist()[0] == 0            # round 1 pick is row 0
+    assert len(sel) == len(set(sel.tolist()))
+
+
+def test_last_candidate_selectable_late_round_streaming():
+    g, target = _lastrow_pool()
+    n = g.shape[0]
+    out = stream_lib.omp_select_streaming(
+        stream_lib.array_chunks(g, 8), jnp.asarray(target), 4, lam=1e-6,
+        buffer_size=4, chunk_topm=2)
+    sel = np.asarray(out.indices)[np.asarray(out.mask)]
+    assert n - 1 in sel.tolist(), sel
+    assert len(sel) == len(set(sel.tolist()))
+
+
+def test_greedy_sentinel_fix_craig_glister():
+    """The same in-bounds-sentinel race existed in CRAIG/GLISTER's greedy
+    loops: a selection containing candidate n-1 must never duplicate."""
+    from repro.core.craig import craig
+    from repro.core.glister import glister
+
+    g, target = _lastrow_pool(n=17, d=6)
+    sel = craig(jnp.asarray(g), 8)
+    got = np.asarray(sel.indices)[np.asarray(sel.mask)]
+    assert len(got) == len(set(got.tolist())), got
+    sel = glister(jnp.asarray(g), jnp.asarray(target), 8)
+    got = np.asarray(sel.indices)[np.asarray(sel.mask)]
+    assert len(got) == len(set(got.tolist())), got

@@ -1,0 +1,212 @@
+"""Streaming block-OMP subsystem (core/streaming.py, DESIGN.md §4).
+
+Chunking knobs (chunk size, per-chunk top-m, buffer size) are
+implementation details — any setting must reproduce the in-memory
+selection exactly.  Also covers the out-of-core path (np.memmap pools),
+the chunked proxy extraction plumbing, the certification/pass accounting,
+and the pmap shard-parallel chunk scorer.
+"""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import streaming as stream_lib
+from repro.core.omp import omp_select
+from repro.data.loader import ChunkedPool
+
+
+def _pool(seed, n, d):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal((n, d)).astype(np.float32)
+
+
+def _ref(g, target, k, **kw):
+    return omp_select(jnp.asarray(g), jnp.asarray(target), k=k, **kw)
+
+
+def _assert_matches(out, ref):
+    np.testing.assert_array_equal(np.asarray(out.indices),
+                                  np.asarray(ref[0]))
+    np.testing.assert_array_equal(np.asarray(out.mask), np.asarray(ref[2]))
+    np.testing.assert_allclose(np.asarray(out.weights), np.asarray(ref[1]),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(float(out.err), float(ref[3]), rtol=1e-4,
+                               atol=1e-5)
+
+
+def test_chunk_size_invariant():
+    """Chunk size (divisor or not) never changes the selection."""
+    g = _pool(0, 256, 24)
+    target = g.sum(axis=0)
+    ref = _ref(g, target, 32, lam=0.2)
+    for cs in (32, 100, 256, 1000):
+        out = stream_lib.omp_select_streaming(
+            stream_lib.array_chunks(g, cs), target, 32, lam=0.2,
+            buffer_size=64)
+        _assert_matches(out, ref)
+
+
+def test_buffer_size_invariant():
+    """Top-M buffer size trades passes for memory, never the result."""
+    g = _pool(1, 192, 16)
+    target = g.sum(axis=0)
+    ref = _ref(g, target, 24, lam=0.3)
+    passes = []
+    for m in (4, 32, 256):
+        out = stream_lib.omp_select_streaming(
+            stream_lib.array_chunks(g, 64), target, 24, lam=0.3,
+            buffer_size=m)
+        _assert_matches(out, ref)
+        passes.append(out.stats.passes)
+    # a buffer that swallows the pool certifies everything in one pass
+    assert passes[-1] == 1
+    assert passes[0] >= passes[-1]
+
+
+def test_chunk_topm_smaller_than_buffer():
+    g = _pool(2, 160, 12)
+    target = g.sum(axis=0)
+    ref = _ref(g, target, 20, lam=0.2)
+    out = stream_lib.omp_select_streaming(
+        stream_lib.array_chunks(g, 40), target, 20, lam=0.2,
+        buffer_size=32, chunk_topm=4)
+    _assert_matches(out, ref)
+
+
+def test_multi_pass_and_certified_accounting():
+    """Small buffer forces rescans; k >= n tail certifies in-buffer."""
+    g = _pool(3, 100, 8)
+    target = g.sum(axis=0)
+    out = stream_lib.omp_select_streaming(
+        stream_lib.array_chunks(g, 32), target, 120, lam=0.2,
+        buffer_size=16)
+    assert out.stats.passes > 1                      # rescans happened
+    assert out.stats.rounds == 120
+    assert out.stats.certified_rounds > 0            # buffer rounds fired
+    assert out.stats.pool_size == 100
+    _assert_matches(out, _ref(g, target, 120, lam=0.2))
+
+
+def test_out_of_core_memmap_pool(tmp_path):
+    """np.memmap pool: selection without ever materializing the pool."""
+    n, d = 4096, 32
+    g = _pool(4, n, d)
+    path = os.path.join(tmp_path, "pool.f32")
+    mm = np.memmap(path, dtype=np.float32, mode="w+", shape=(n, d))
+    mm[:] = g
+    mm.flush()
+    del mm
+    pool = np.memmap(path, dtype=np.float32, mode="r", shape=(n, d))
+    target, total = stream_lib.streaming_target(
+        stream_lib.array_chunks(pool, 512))
+    assert total == n
+    np.testing.assert_allclose(np.asarray(target), g.sum(axis=0), rtol=1e-5)
+    out = stream_lib.omp_select_streaming(
+        stream_lib.array_chunks(pool, 512), jnp.asarray(g.sum(axis=0)), 48,
+        lam=0.2, buffer_size=128)
+    _assert_matches(out, _ref(g, g.sum(axis=0), 48, lam=0.2))
+
+
+def test_gradmatch_streaming_wrappers():
+    from repro.core.gradmatch import gradmatch
+
+    g = _pool(5, 200, 16)
+    ref = gradmatch(jnp.asarray(g), k=24, lam=0.5)
+    sel = stream_lib.gradmatch_streaming_array(g, 24, lam=0.5,
+                                               chunk_size=64,
+                                               buffer_size=64)
+    np.testing.assert_array_equal(np.asarray(sel.indices),
+                                  np.asarray(ref.indices))
+    np.testing.assert_allclose(np.asarray(sel.weights),
+                               np.asarray(ref.weights), rtol=1e-4,
+                               atol=1e-5)
+    # factory variant computes the target with its own summing pass
+    sel2 = stream_lib.gradmatch_streaming(
+        stream_lib.array_chunks(g, 64), 24, lam=0.5, buffer_size=64)
+    np.testing.assert_array_equal(np.asarray(sel2.indices),
+                                  np.asarray(ref.indices))
+
+
+def test_select_dispatch_stream_strategy():
+    from repro.core import selection as sel_lib
+
+    g = jnp.asarray(_pool(6, 128, 12))
+    a = sel_lib.select("gradmatch", jax.random.PRNGKey(0), g, k=16,
+                       per_class=False)
+    b = sel_lib.select("gradmatch-stream", jax.random.PRNGKey(0), g, k=16,
+                       chunk_size=48, stream_buffer=32)
+    np.testing.assert_array_equal(np.asarray(a.indices),
+                                  np.asarray(b.indices))
+    np.testing.assert_allclose(np.asarray(a.weights), np.asarray(b.weights),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_chunked_pool_iteration():
+    x = np.arange(23 * 3, dtype=np.float32).reshape(23, 3)
+    y = np.arange(23)
+    pool = ChunkedPool(x, y, chunk_size=10)
+    assert pool.n == 23 and pool.num_chunks() == 3
+    for _ in range(2):                    # re-iterable, same order
+        chunks = list(pool.chunks())
+        assert [c[2] for c in chunks] == [0, 10, 20]
+        assert [c[0].shape[0] for c in chunks] == [10, 10, 3]
+        np.testing.assert_array_equal(np.concatenate([c[0] for c in chunks]),
+                                      x)
+        np.testing.assert_array_equal(np.concatenate([c[1] for c in chunks]),
+                                      y)
+
+
+def test_proxy_chunk_stream_matches_full_extraction():
+    """Chunked proxy extraction == full-pool extraction, chunk by chunk."""
+    from repro.core import proxies as proxy_lib
+
+    rng = np.random.default_rng(7)
+    n, dh, c = 64, 8, 5
+    hidden = rng.standard_normal((n, dh)).astype(np.float32)
+    logits = rng.standard_normal((n, c)).astype(np.float32)
+    labels = rng.integers(0, c, n)
+
+    def proxy_fn(params, x, y):
+        del params
+        h, z = x
+        return (proxy_lib.per_class_grad_proxy(h, z, y),
+                proxy_lib.bias_grad_proxy(z, y))
+
+    def raw_chunks():
+        for lo in (0, 24, 48):
+            hi = min(lo + 24, n)
+            yield ((hidden[lo:hi], logits[lo:hi]), labels[lo:hi], lo)
+
+    chunks = proxy_lib.proxy_chunk_stream(raw_chunks, proxy_fn, None)
+    got = np.concatenate([np.asarray(p) for p, _ in chunks()])
+    want = np.asarray(proxy_lib.bias_grad_proxy(jnp.asarray(logits),
+                                                jnp.asarray(labels)))
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_pmap_chunk_scorer_parity():
+    """The distributed (pmap) chunk scorer is a drop-in for the local one
+    — same selection on this host's device set."""
+    from repro.core.distributed import pmap_chunk_topm
+
+    g = _pool(8, 160, 16)
+    target = g.sum(axis=0)
+    ref = _ref(g, target, 20, lam=0.2)
+    out = stream_lib.omp_select_streaming(
+        stream_lib.array_chunks(g, 48), target, 20, lam=0.2,
+        buffer_size=32, score_chunk_fn=pmap_chunk_topm)
+    _assert_matches(out, ref)
+
+
+def test_streaming_guard_on_unstable_iterator():
+    """A pool iterator that returns nothing must not loop forever."""
+    def empty():
+        return iter(())
+
+    out = stream_lib.omp_select_streaming(empty, jnp.ones((8,)), 4)
+    assert int(np.asarray(out.mask).sum()) == 0
+    assert out.stats.passes == 0

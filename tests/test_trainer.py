@@ -81,6 +81,46 @@ def test_checkpoint_resume_continues(data, tmp_path):
     assert rep.work_units < 1.25 * solo.work_units
 
 
+def test_gradmatch_stream_learns(data):
+    """The streaming (out-of-core) selection path trains end to end."""
+    train, val = data
+    rep = AdaptiveTrainer(
+        mlp(in_dim=24, num_classes=8),
+        _cfg(strategy="gradmatch-stream", chunk_size=256, stream_buffer=128),
+        train, val).run()
+    assert rep.final_acc > 0.3
+    assert rep.selection_rounds >= 2
+    assert rep.subset_size <= int(train.n * 0.25)
+
+
+def test_resume_bit_exact(data, tmp_path):
+    """Interrupted + resumed training reproduces the uninterrupted run
+    bit-for-bit: same selection rounds fired, identical final params."""
+    from repro.checkpoint.checkpoint import load_checkpoint
+
+    train, val = data
+    kw = dict(strategy="gradmatch-pb", checkpoint_dir=str(tmp_path),
+              checkpoint_every=4, seed=11, epochs=12)
+    # uninterrupted run: snapshots at epochs 4, 8, 12
+    rep1 = AdaptiveTrainer(mlp(in_dim=24, num_classes=8), _cfg(**kw),
+                           train, val).run()
+    snap1 = load_checkpoint(str(tmp_path), 12)
+    # simulate preemption after epoch 8: discard the final snapshot
+    import shutil
+    shutil.rmtree(tmp_path / "step_0000000012")
+    # resume: picks up at epoch 8, re-fires the epoch-8 selection, runs to 12
+    rep2 = AdaptiveTrainer(mlp(in_dim=24, num_classes=8), _cfg(**kw),
+                           train, val).run()
+    snap2 = load_checkpoint(str(tmp_path), 12)
+    assert rep2.selection_rounds == rep1.selection_rounds == 3
+    leaves1, treedef1 = jax.tree_util.tree_flatten(snap1["params"])
+    leaves2, treedef2 = jax.tree_util.tree_flatten(snap2["params"])
+    assert treedef1 == treedef2
+    for a, b in zip(leaves1, leaves2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert snap1["meta"]["work"] == snap2["meta"]["work"]
+
+
 def test_early_stop_budget(data):
     train, val = data
     rep = AdaptiveTrainer(mlp(in_dim=24, num_classes=8),
