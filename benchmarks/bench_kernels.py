@@ -55,6 +55,33 @@ def run(quick=False) -> list[dict]:
     record(name="sqdist", n=1024, d=d, ref_ms=round(t * 1e3, 2),
            max_abs_err=f"{err:.2e}")
 
+    # fused facility-location gain scan (CRAIG greedy rescan, DESIGN.md §5)
+    from repro.kernels.fl_gain import fl_gain_argmax, fl_gain_argmax_otf
+
+    nf, df = 1024, 64
+    gf = jax.random.normal(jax.random.fold_in(k, 10), (nf, df))
+    sq = jnp.sum(gf**2, axis=1)
+    dist = jnp.sqrt(jnp.maximum(sq[:, None] + sq[None, :]
+                                - 2.0 * gf @ gf.T, 0.0))
+    lm = jnp.max(dist)
+    sim = lm - dist
+    cover = jnp.abs(jax.random.normal(jax.random.fold_in(k, 11), (nf,)))
+    fmask = jnp.arange(nf) % 5 != 0
+    rok = jnp.ones((nf,), bool)
+    t = time_fn(jax.jit(ref.fl_gain_argmax_ref), sim, cover, fmask)
+    kg, ki, _ = fl_gain_argmax(sim, cover, fmask, interpret=True)
+    rg, ri, _ = ref.fl_gain_argmax_ref(sim, cover, fmask)
+    err = float(jnp.max(jnp.abs(kg - rg))) + float(int(ki) != int(ri))
+    record(name="fl_gain_argmax", n=nf, ref_ms=round(t * 1e3, 2),
+           max_abs_err=f"{err:.2e}")
+    t = time_fn(jax.jit(ref.fl_gain_argmax_otf_ref), gf, cover, rok,
+                fmask, lm)
+    kg, ki, _ = fl_gain_argmax_otf(gf, cover, rok, fmask, lm,
+                                   interpret=True)
+    err = float(jnp.max(jnp.abs(kg - rg))) + float(int(ki) != int(ri))
+    record(name="fl_gain_argmax_otf", n=nf, d=df,
+           ref_ms=round(t * 1e3, 2), max_abs_err=f"{err:.2e}")
+
     h = jax.random.normal(k, (n, dh))
     z = jax.random.normal(jax.random.fold_in(k, 2), (n, 64))
     y = jax.random.randint(jax.random.fold_in(k, 3), (n,), 0, 64)

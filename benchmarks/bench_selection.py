@@ -14,6 +14,10 @@ for the incremental-Gram rewrite (DESIGN.md §2).
 ``run_streaming`` times the streaming block-OMP (DESIGN.md §4) against the
 in-memory incremental solver at pools up to 65536, recording wall-clock
 and peak-memory proxies (chunk + buffer bytes vs resident pool bytes).
+
+``run_greedy`` times the certified lazy / stochastic CRAIG tiers
+(DESIGN.md §5) at pools where the dense greedy is skipped, including a
+pool-32768 run whose (n, n) similarity is never materialized.
 """
 
 from __future__ import annotations
@@ -42,8 +46,14 @@ def run(pool_sizes=(512, 2048, 8192), d=64, budget=0.1, batch=32,
         g = jax.random.normal(jax.random.PRNGKey(n), (n, d))
         labels = jnp.arange(n) % 10
         k = int(n * budget)
-        for strategy in ("gradmatch", "gradmatch-pb", "craig", "craig-pb",
-                         "glister", "random"):
+        for strategy in ("gradmatch", "gradmatch-pb", "craig", "craig-lazy",
+                         "craig-stochastic", "craig-pb", "glister",
+                         "random"):
+            if strategy == "craig" and n > 8192:
+                # O(k·n²) dense greedy: ~2 min per call at 8192 already;
+                # beyond that only the lazy/stochastic tiers are timed
+                # (the parity gate asserts they select identically).
+                continue
             def sel_once(g=g, strategy=strategy, k=k):
                 s = sel_lib.select(strategy, jax.random.PRNGKey(0), g, k,
                                    labels=labels, num_classes=10,
@@ -132,8 +142,60 @@ def run_streaming(pool_sizes=(8192, 32768, 65536), d=64, k=512,
     return rows
 
 
+def run_greedy(pool_sizes=(8192, 32768), d=64, k=512, block=64, sample=64,
+               quick=False) -> list[dict]:
+    """Certified lazy / stochastic CRAIG at pools beyond the dense tier
+    (core/greedy.py, DESIGN.md §5).
+
+    Records wall-clock plus the engine's certification accounting
+    (rescans vs certified rounds — the entire perf claim) and a
+    similarity-memory proxy: above ``greedy._OTF_AUTO_BYTES`` the scan
+    tiles s_ij from the gradients on the fly and ``sim_bytes`` drops to 0
+    — the (n, n) matrix is never materialized in any memory space.
+    """
+    from repro.core import greedy as greedy_lib
+
+    if quick:
+        pool_sizes = (8192,)
+        k = 128
+    rows = []
+    record = make_recorder("selection_greedy", rows)
+    for n in pool_sizes:
+        g = jax.random.normal(jax.random.PRNGKey(n), (n, d))
+        otf = greedy_lib.auto_on_the_fly(n)
+        sim_bytes = 0 if otf else n * n * 4
+
+        def lazy_once(g=g, k=k):
+            res = greedy_lib.fl_greedy(g, k, method="lazy", block=block)
+            jax.block_until_ready(res.cover)
+            return res
+
+        res = lazy_once()                    # warm + certification stats
+        t = time_fn(lambda: lazy_once().cover, warmup=0, iters=2)
+        record(strategy="craig-lazy", pool=n, k=k, ms=round(t * 1e3, 2),
+               on_the_fly=otf, sim_bytes=sim_bytes, pool_bytes=n * d * 4,
+               rescans=res.stats.rescans,
+               certified_rounds=res.stats.certified_rounds,
+               block_evals=res.stats.block_evals)
+
+        def stoch_once(g=g, k=k):
+            res = greedy_lib.fl_greedy(g, k, method="stochastic",
+                                       key=jax.random.PRNGKey(0),
+                                       sample=sample)
+            jax.block_until_ready(res.cover)
+            return res
+
+        stoch_once()
+        t = time_fn(lambda: stoch_once().cover, warmup=0, iters=2)
+        record(strategy="craig-stochastic", pool=n, k=k,
+               ms=round(t * 1e3, 2), on_the_fly=otf, sim_bytes=sim_bytes,
+               pool_bytes=n * d * 4, sample=sample)
+    return rows
+
+
 def main(quick=False) -> list[dict]:
-    return run(quick=quick) + run_streaming(quick=quick)
+    return (run(quick=quick) + run_streaming(quick=quick)
+            + run_greedy(quick=quick))
 
 
 if __name__ == "__main__":

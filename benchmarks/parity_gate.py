@@ -1,19 +1,25 @@
 """CI parity gate (run after the differential tests, see ci.yml).
 
-Two checks, both against artifacts committed in the repo:
+Four checks, all against artifacts committed in the repo:
 
 1. **Streaming-vs-dense smoke at pool = 16384**: the streaming block-OMP
    must select the identical subset as the dense oracle on a pool larger
    than any unit-test shape (chunked 4096 at a 512-slot buffer, so the
    multi-pass path is really exercised).
-2. **Perf regression**: re-times the incremental solver at the committed
-   ``BENCH_selection.json`` headline shape and fails if its slowdown
-   relative to the *dense* solver (timed in the same run, on the same
-   machine) regresses by more than 2x against the committed baseline's
-   incremental/dense ratio.  Normalizing by the dense solver makes the
-   gate machine-independent — CI runners are slower than the machine the
-   baseline was committed from, but both solvers slow down together (a
-   true regression to the dense path moves the ratio 15-30x).
+2. **OMP perf regression**: re-times the incremental solver at the
+   committed ``BENCH_selection.json`` headline shape and fails if its
+   slowdown relative to the *dense* solver (timed in the same run, on the
+   same machine) regresses by more than 2x against the committed
+   baseline's incremental/dense ratio.  Normalizing by the dense solver
+   makes the gate machine-independent — CI runners are slower than the
+   machine the baseline was committed from, but both solvers slow down
+   together (a true regression to the dense path moves the ratio 15-30x).
+3. **Lazy-greedy-vs-dense smoke at pool = 4096**: the certified lazy
+   CRAIG tier (core/greedy.py, DESIGN.md §5) must select the identical
+   subset as the dense greedy oracle beyond unit-test shapes.
+4. **Greedy perf regression**: same machine-independent >2x ratio rule as
+   (2), applied to the craig-lazy/craig time pair at the largest
+   committed pool whose dense greedy is still CI-affordable.
 
 Exit code 0 = gate passed.  ``python -m benchmarks.parity_gate``
 """
@@ -101,9 +107,78 @@ def check_incremental_regression() -> bool:
     return ok
 
 
+def check_greedy_parity(n=4096, d=64, k=128) -> bool:
+    from repro.core import greedy as greedy_lib
+
+    g = jax.random.normal(jax.random.PRNGKey(11), (n, d))
+    dense = greedy_lib.fl_greedy(g, k, method="dense")
+    lazy = greedy_lib.fl_greedy(g, k, method="lazy", block=64)
+    same_idx = np.array_equal(np.asarray(lazy.indices),
+                              np.asarray(dense.indices))
+    same_mask = np.array_equal(np.asarray(lazy.mask),
+                               np.asarray(dense.mask))
+    s = lazy.stats
+    print(f"parity_gate,check=craig-lazy-vs-dense,pool={n},k={k},"
+          f"indices={same_idx},mask={same_mask},rescans={s.rescans},"
+          f"certified={s.certified_rounds}", flush=True)
+    return same_idx and same_mask
+
+
+def check_greedy_regression(dense_budget_ms=15000.0) -> bool:
+    """Re-time craig-lazy against the dense greedy at the largest
+    committed pool whose baseline dense time fits the CI budget — the
+    8192 pool's ~2-minute dense greedy is excluded (its lazy parity
+    coverage is the pool-4096 smoke above plus the full-bench ratio
+    recorded in BENCH_selection.json, not a per-CI re-run)."""
+    from repro.core import selection as sel_lib
+
+    path = REPO_ROOT / "BENCH_selection.json"
+    if not path.exists():
+        print("parity_gate,check=greedy-regression,skipped=no-baseline",
+              flush=True)
+        return True
+    rows = json.loads(path.read_text())["rows"]
+    # Key on (pool, k): craig-lazy is recorded at several k per pool
+    # (run() and run_greedy()); the ratio is only meaningful for rows
+    # timed at the identical workload.
+    by_pool = {}
+    for r in rows:
+        if "ms" in r and r.get("strategy") in ("craig", "craig-lazy"):
+            by_pool.setdefault((r["pool"], r["k"]), {})[r["strategy"]] = r
+    pools = [p for p, d in by_pool.items()
+             if len(d) == 2 and float(d["craig"]["ms"]) <= dense_budget_ms]
+    if not pools:
+        print("parity_gate,check=greedy-regression,skipped=no-baseline-pair",
+              flush=True)
+        return True
+    n, k = max(pools)
+    lazy_row = by_pool[(n, k)]["craig-lazy"]
+    dense_row = by_pool[(n, k)]["craig"]
+    base_ratio = float(lazy_row["ms"]) / float(dense_row["ms"])
+    g = jax.random.normal(jax.random.PRNGKey(n), (n, 64))
+    labels = jnp.arange(n) % 10
+
+    def once(strategy):
+        return sel_lib.select(strategy, jax.random.PRNGKey(0), g, k,
+                              labels=labels, num_classes=10,
+                              per_class=False).weights
+
+    ms_lazy = time_fn(lambda: once("craig-lazy"), warmup=1, iters=3) * 1e3
+    ms_dense = time_fn(lambda: once("craig"), warmup=1, iters=2) * 1e3
+    ratio = ms_lazy / ms_dense
+    ok = ratio <= REGRESSION_FACTOR * base_ratio
+    print(f"parity_gate,check=greedy-regression,pool={n},k={k},"
+          f"lazy_ms={ms_lazy:.2f},dense_ms={ms_dense:.2f},"
+          f"ratio={ratio:.4f},baseline_ratio={base_ratio:.4f},"
+          f"limit={REGRESSION_FACTOR}x,ok={ok}", flush=True)
+    return ok
+
+
 def main() -> int:
     ok = check_streaming_parity()
     ok &= check_incremental_regression()
+    ok &= check_greedy_parity()
+    ok &= check_greedy_regression()
     print(f"parity_gate,{'PASS' if ok else 'FAIL'}", flush=True)
     return 0 if ok else 1
 

@@ -8,30 +8,37 @@ equivalently maximizes the facility-location function
 ``F_hat(X) = sum_i max_{j in X} (L_max - ||g_i - g_j||)`` with the classic
 1-1/e greedy.  Weights are cluster sizes: w_j = #{ i : j = argmax sim(i, j) }.
 
-TPU adaptation: the greedy is a fixed-k ``lax.fori_loop`` over a tiled
-similarity matrix.  The (n, n) pairwise distances come from the Pallas
-``sqdist`` kernel via kernels/ops.py when n is large; this module accepts a
-precomputed similarity or builds one densely for small n.
+The greedy itself lives in ``core/greedy.py`` (DESIGN.md §5) and runs in
+three tiers selected by ``method``:
+
+- ``"dense"``   — the naive full-rescan loop, kept as the parity oracle.
+- ``"lazy"``    — certified lazy greedy: index-identical selections at a
+  per-round cost of one top-``block`` bound refresh instead of an O(n²)
+  scan, with the fused ``fl_gain_argmax`` kernel handling the occasional
+  full rescan.
+- ``"stochastic"`` — seeded stochastic greedy (per-round candidate
+  subsampling), the approximate tier for pools where even lazy rounds are
+  too expensive.
+
+Beyond ``greedy._OTF_AUTO_BYTES`` (or with ``on_the_fly=True``) the lazy/
+stochastic tiers tile the similarity on the fly from ``grads`` — the
+``(n, n)`` matrix never materializes, which is what makes CRAIG feasible at
+pool 32768/65536 where the resident similarity alone is 4–16 GB.
+
+``l_max`` is the similarity offset ``s_ij = L_max - ||g_i - g_j||``; it
+defaults to the max observed distance on the resident path and to the
+``2·max‖g‖`` diameter bound on the fly.  Pass it explicitly whenever two
+scans must agree on gain values (the parity tests do).
 """
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 
+from repro.core import greedy as greedy_lib
 from repro.core.gradmatch import SelectionResult, _normalize
-
-
-def pairwise_sim(grads: jax.Array, dist_fn=None) -> jax.Array:
-    """Similarity  s_ij = L_max - ||g_i - g_j||  (n, n), L_max = max dist."""
-    if dist_fn is not None:
-        d2 = dist_fn(grads, grads)
-    else:
-        sq = jnp.sum(grads**2, axis=-1)
-        d2 = sq[:, None] + sq[None, :] - 2.0 * (grads @ grads.T)
-    dist = jnp.sqrt(jnp.maximum(d2, 0.0))
-    return jnp.max(dist) - dist
+from repro.core.greedy import pairwise_sim  # noqa: F401  (re-export)
 
 
 def craig(
@@ -40,61 +47,60 @@ def craig(
     sim: jax.Array | None = None,   # optional precomputed (n, n) similarity
     valid: jax.Array | None = None,
     dist_fn=None,
+    method: str = "dense",          # "dense" | "lazy" | "stochastic"
+    l_max: jax.Array | float | None = None,
+    block: int = 64,                # lazy: top-B bound-refresh width
+    sample: int = 64,               # stochastic: per-round sample size
+    key: jax.Array | None = None,   # stochastic sampling seed
+    on_the_fly: bool | None = None,
 ) -> SelectionResult:
     n = grads.shape[0]
-    if sim is None:
-        sim = pairwise_sim(grads.astype(jnp.float32), dist_fn=dist_fn)
+    g = grads.astype(jnp.float32)
     if valid is None:
         valid = jnp.ones((n,), dtype=bool)
-    # Invalid candidates can neither be selected nor demand coverage.
-    vrow = valid[:, None].astype(sim.dtype)
-    sim = sim * vrow  # rows of invalid i contribute 0 to coverage
+    if sim is None and dist_fn is not None:
+        sim = greedy_lib.build_sim(g, l_max=l_max, dist_fn=dist_fn)
+    # Resolve the scan once, here: the weights/objective below must use
+    # the exact (sim, L_max, otf) the selection ran under.
+    sim, lm, otf = greedy_lib.resolve_fl_scan(g, sim, method, l_max=l_max,
+                                              on_the_fly=on_the_fly)
 
-    neg_inf = jnp.float32(-jnp.inf)
-
-    def body(t, carry):
-        indices, mask, cover = carry           # cover: (n,) current max sim
-        # marginal gain of adding j:  sum_i max(cover_i, s_ij) - sum_i cover_i
-        gains = jnp.sum(jnp.maximum(cover[:, None], sim), axis=0) - jnp.sum(
-            cover
-        )
-        # Unused slots point at the out-of-bounds sentinel n so mode="drop"
-        # discards them (an in-bounds sentinel races duplicate writes when
-        # candidate n-1 is genuinely selected — see omp.py).
-        taken = jnp.zeros((n,), dtype=bool).at[
-            jnp.where(mask, indices, n)
-        ].set(mask, mode="drop")
-        gains = jnp.where(valid & ~taken, gains, neg_inf)
-        e = jnp.argmax(gains).astype(jnp.int32)
-        indices = indices.at[t].set(e)
-        mask = mask.at[t].set(True)
-        cover = jnp.maximum(cover, sim[:, e])
-        return indices, mask, cover
-
-    indices0 = jnp.full((k,), -1, dtype=jnp.int32)
-    mask0 = jnp.zeros((k,), dtype=bool)
-    cover0 = jnp.zeros((n,), dtype=jnp.float32)
-    indices, mask, cover = lax.fori_loop(0, k, body, (indices0, mask0, cover0))
+    res = greedy_lib.fl_greedy(
+        g, k, sim=sim, valid=valid, l_max=lm, method=method, block=block,
+        sample=sample, key=key, on_the_fly=otf)
 
     # Weights: size of each medoid's cluster (paper: w_j = #assigned to j).
-    sel = jnp.where(mask, indices, 0)
-    sim_sel = sim[:, sel]                                    # (n, k)
-    sim_sel = jnp.where(mask[None, :], sim_sel, neg_inf)
-    assign = jnp.argmax(sim_sel, axis=1)                     # (n,) slot ids
+    # Medoid similarities are read as rows (k, n) — the similarity is
+    # symmetric, and a row gather is contiguous where a column gather
+    # strides the whole matrix.
+    sel = jnp.where(res.mask, res.indices, 0)
+    if otf:
+        sqn = jnp.sum(g * g, axis=1)
+        sim_sel = greedy_lib.fl_rows(
+            g, sqn, valid.astype(jnp.float32), lm, sel)      # (k, n)
+    else:
+        sim_sel = sim[sel]                                   # (k, n)
+    neg_inf = jnp.float32(-jnp.inf)
+    sim_sel = jnp.where(res.mask[:, None], sim_sel, neg_inf)
+    assign = jnp.argmax(sim_sel, axis=0)                     # (n,) slot ids
     w = jnp.sum(
-        jax.nn.one_hot(assign, k, dtype=jnp.float32)
+        jax.nn.one_hot(assign, int(k), dtype=jnp.float32)
         * valid[:, None].astype(jnp.float32),
         axis=0,
     )
-    w = jnp.where(mask, w, 0.0)
-    return SelectionResult(indices, _normalize(w, mask), mask,
-                           jnp.float32(jnp.sum(jnp.max(sim) - cover)))
+    w = jnp.where(res.mask, w, 0.0)
+    # Remaining coverage deficit sum_i (L_max - cover_i), valid rows only —
+    # rows zeroed out of the similarity demand no coverage.
+    err = jnp.sum(jnp.where(valid, lm - res.cover, 0.0))
+    return SelectionResult(res.indices, _normalize(w, res.mask), res.mask,
+                           jnp.float32(err))
 
 
 def craig_pb(example_proxies: jax.Array, batch_size: int, k_batches: int,
-             dist_fn=None) -> SelectionResult:
+             dist_fn=None, method: str = "dense",
+             key: jax.Array | None = None) -> SelectionResult:
     """CRAIGPB: facility location over mini-batch mean gradients."""
     from repro.core import proxies as proxy_lib
 
     pb = proxy_lib.per_batch(example_proxies, batch_size)
-    return craig(pb, k=k_batches, dist_fn=dist_fn)
+    return craig(pb, k=k_batches, dist_fn=dist_fn, method=method, key=key)

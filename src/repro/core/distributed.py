@@ -25,7 +25,7 @@ dry-run mesh and the single-CPU test mesh.
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -233,6 +233,124 @@ def pmap_chunk_topm(chunk, pool_ok, gids, offset, residual, sel_idx,
     if ndev * m_loc > m:           # merge itself dropped candidates
         thresh = jnp.maximum(thresh, mv[m - 1])
     return mv, mi, mr, mok, jnp.max(cmax), thresh
+
+
+# ---------------------------------------------------------------------------
+# shard-parallel facility-location gain scan (core/greedy.py, DESIGN.md §5)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _pmap_fl_scorer(per: int, row_block: int):
+    """pmap'd per-device FL gain scorer over a candidate-column shard
+    (plain pmap — no shard_map, so it runs on older jax; same pattern as
+    ``_pmap_scorer`` above)."""
+    from repro.core import greedy as greedy_lib
+
+    def local(cand, cand_sqn, avail_l, offset, grads, sqnorms, cover,
+              row_okf, l_max):
+        gains = greedy_lib.fl_gains_cols(cand, cand_sqn, grads, sqnorms,
+                                         cover, row_okf, l_max,
+                                         block=row_block)
+        gm = jnp.where(avail_l, gains, -jnp.inf)
+        v = jnp.max(gm)
+        # Lowest local position attaining the max (ties -> lowest global
+        # id, since each shard owns a contiguous id range).
+        pos = jnp.argmin(jnp.where(gm == v, jnp.arange(per), per))
+        return v, offset + pos.astype(jnp.int32)
+
+    return jax.pmap(local, in_axes=(0, 0, 0, 0, None, None, None, None,
+                                    None))
+
+
+class FLPoolShards(NamedTuple):
+    """Round-invariant operands of the sharded gain scan, prepared once:
+    the candidate shards, their norms, the replicated pool and the shard
+    id offsets.  Only (cover, avail) change between greedy rounds, so
+    only they are re-fed per round."""
+    cand: jax.Array       # (ndev, per, d) candidate column shards
+    cand_sqn: jax.Array   # (ndev, per)
+    offsets: jax.Array    # (ndev,) global id base per shard
+    grads: jax.Array      # (n, d) replicated coverage-row pool, f32
+    sqnorms: jax.Array    # (n,)
+    per: int
+    n: int
+
+
+def shard_fl_pool(grads) -> FLPoolShards:
+    ndev = jax.local_device_count()
+    n, d = grads.shape
+    g = jnp.asarray(grads, jnp.float32)
+    sqnorms = jnp.sum(g * g, axis=1)
+    per = -(-n // ndev)
+    pad = per * ndev - n
+    cand = jnp.pad(g, ((0, pad), (0, 0))).reshape(ndev, per, d)
+    cand_sqn = jnp.pad(sqnorms, (0, pad)).reshape(ndev, per)
+    offsets = jnp.arange(ndev, dtype=jnp.int32) * per
+    return FLPoolShards(cand, cand_sqn, offsets, g, sqnorms, per, n)
+
+
+def pmap_fl_gains(shards: FLPoolShards, cover, avail, row_okf, l_max, *,
+                  row_block: int = 256):
+    """One facility-location gain scan, candidate columns sharded across
+    local devices.  Returns the replicated (argmax id, max gain) with
+    global lowest-id tie-breaking — the per-round collective of the
+    sharded CRAIG greedy.  The similarity is reconstructed from the pool
+    in (row_block, per-shard) strips, so no device ever holds an (n, n)
+    block."""
+    ndev = shards.cand.shape[0]
+    avail_p = jnp.pad(avail, (0, ndev * shards.per - shards.n))
+    vals, ids = _pmap_fl_scorer(shards.per, row_block)(
+        shards.cand, shards.cand_sqn, avail_p.reshape(ndev, shards.per),
+        shards.offsets, shards.grads, shards.sqnorms, cover, row_okf,
+        jnp.asarray(l_max, jnp.float32))
+    gmax = jnp.max(vals)
+    e = jnp.min(jnp.where(vals == gmax, ids, jnp.int32(shards.n)))
+    return e, gmax
+
+
+def fl_greedy_pmap(grads, k: int, valid=None, l_max=None,
+                   row_block: int = 256):
+    """CRAIG's greedy with every per-round gain scan pmap-sharded over
+    local devices (each shard scores its candidate columns, the host
+    merges one (value, id) pair per device — O(devices) per-round
+    traffic, mirroring ``sharded_omp_select``'s pmax/pmin election).
+
+    Scan semantics match the dense oracle (every round is a full exact
+    scan), so selections are index-identical to ``greedy.fl_greedy
+    (method="dense")`` up to similarity-reconstruction rounding; the
+    similarity itself is tiled on the fly, never materialized.
+    """
+    from repro.core import greedy as greedy_lib
+    from repro.core.greedy import GreedyResult, GreedyStats
+
+    n = grads.shape[0]
+    if valid is None:
+        valid = jnp.ones((n,), bool)
+    row_okf = valid.astype(jnp.float32)
+    lm = greedy_lib.default_l_max(grads) if l_max is None else l_max
+    lm = jnp.asarray(lm, jnp.float32)
+    shards = shard_fl_pool(grads)     # round-invariant: shipped once
+
+    indices = jnp.full((k,), -1, jnp.int32)
+    mask = jnp.zeros((k,), bool)
+    picked = jnp.zeros((k,), jnp.float32)
+    cover = jnp.zeros((n,), jnp.float32)
+    avail = valid
+    for t in range(int(k)):
+        if not bool(jnp.any(avail)):
+            break
+        e, gain = pmap_fl_gains(shards, cover, avail, row_okf, lm,
+                                row_block=row_block)
+        indices = indices.at[t].set(e)
+        mask = mask.at[t].set(True)
+        picked = picked.at[t].set(gain)
+        col = greedy_lib.fl_rows(shards.grads, shards.sqnorms, row_okf,
+                                 lm, e[None])[0]
+        cover = jnp.maximum(cover, col)
+        avail = avail & ~(jnp.arange(n) == e)
+    stats = GreedyStats(rounds=int(jnp.sum(mask)),
+                        rescans=int(jnp.sum(mask)))
+    return GreedyResult(indices, mask, picked, cover, stats)
 
 
 def replicate(mesh: Mesh, x: jax.Array) -> jax.Array:

@@ -12,14 +12,20 @@ gradient estimate is advanced one Taylor step,
 
 which reduces to repeated argmax of g_j . v with a shrinking v — this is what
 makes it different from (and per the paper, slightly weaker than) GRAD-MATCH.
+
+The loop runs on the shared greedy engine (``greedy.modular_greedy``,
+DESIGN.md §5): the per-round masked argmax goes through the fused
+``ops.corr_argmax`` kernel (the score vector never hits HBM on TPU), and
+the per-round constants — the row norms ``||g_e||`` — are hoisted out of
+the ``fori_loop`` body into one precomputed ``(n,)`` array.
 """
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 
+from repro.core import greedy as greedy_lib
 from repro.core.gradmatch import SelectionResult
 
 
@@ -30,35 +36,20 @@ def glister(
     eta: float = 1.0,
     valid: jax.Array | None = None,
 ) -> SelectionResult:
-    n = grads.shape[0]
     grads = grads.astype(jnp.float32)
-    if valid is None:
-        valid = jnp.ones((n,), dtype=bool)
-    neg_inf = jnp.float32(-jnp.inf)
+    # Hoisted per-round constants: row norms (the loop used to recompute
+    # ||g_e|| every round) and the 1/k Taylor step scale.
+    norms = jnp.sqrt(jnp.sum(grads * grads, axis=1))
+    scale = jnp.float32(1.0 / k)
+    eta = jnp.float32(eta)
 
-    def body(t, carry):
-        indices, mask, v = carry
-        scores = grads @ v
-        # Unused slots point at the out-of-bounds sentinel n so mode="drop"
-        # discards them (an in-bounds sentinel races duplicate writes when
-        # candidate n-1 is genuinely selected — see omp.py).
-        taken = jnp.zeros((n,), dtype=bool).at[
-            jnp.where(mask, indices, n)
-        ].set(mask, mode="drop")
-        scores = jnp.where(valid & ~taken, scores, neg_inf)
-        e = jnp.argmax(scores).astype(jnp.int32)
-        indices = indices.at[t].set(e)
-        mask = mask.at[t].set(True)
-        v = v - eta * grads[e] / jnp.maximum(
-            jnp.linalg.norm(grads[e]), 1e-8
-        ) * jnp.float32(1.0 / k) * jnp.linalg.norm(v)
-        return indices, mask, v
+    def advance(v, e, t):
+        return v - eta * grads[e] / jnp.maximum(
+            norms[e], 1e-8
+        ) * scale * jnp.linalg.norm(v)
 
-    indices0 = jnp.full((k,), -1, dtype=jnp.int32)
-    mask0 = jnp.zeros((k,), dtype=bool)
-    indices, mask, _ = lax.fori_loop(
-        0, k, body, (indices0, mask0, val_grad.astype(jnp.float32))
-    )
+    indices, mask, _ = greedy_lib.modular_greedy(
+        grads, k, advance, val_grad.astype(jnp.float32), valid=valid)
     # GLISTER is unweighted: uniform 1/k (paper: "does not consider a
     # weighted sum ... therefore slightly sub-optimal").
     w = mask.astype(jnp.float32) / jnp.maximum(jnp.sum(mask), 1)

@@ -2,7 +2,10 @@
 
 ``select()`` maps a strategy name to its selector over a proxy matrix —
 the one place the trainer, benchmarks and examples resolve
-GRAD-MATCH / CRAIG / GLISTER / RANDOM and their PB variants.
+GRAD-MATCH / CRAIG / GLISTER / RANDOM, their PB variants, and the CRAIG
+greedy tiers (``craig`` = dense oracle, ``craig-lazy`` = certified lazy
+greedy with identical selections, ``craig-stochastic`` = seeded
+stochastic greedy — see ``core/greedy.py`` / DESIGN.md §5).
 
 ``warm_start_epochs()`` implements the paper's warm-start budget split
 (§4): run ``T_f = kappa * T * (k/n)`` epochs of full-data training, then
@@ -31,7 +34,14 @@ from repro.core import streaming as stream_lib
 from repro.core.gradmatch import SelectionResult
 
 STRATEGIES = ("gradmatch", "gradmatch-stream", "gradmatch-pb", "craig",
-              "craig-pb", "glister", "random", "full")
+              "craig-lazy", "craig-stochastic", "craig-pb", "glister",
+              "random", "full")
+
+# CRAIG tiers: the dense oracle and the two fast greedy modes of the
+# shared engine (core/greedy.py).  "craig-lazy" selects index-identically
+# to "craig"; "craig-stochastic" is the seeded approximate tier.
+_CRAIG_METHODS = {"craig": "dense", "craig-lazy": "lazy",
+                  "craig-stochastic": "stochastic"}
 
 
 def select(
@@ -91,8 +101,9 @@ def select(
         return gm_lib.gradmatch_pb(
             proxies, batch_size, max(k // batch_size, 1), lam=lam, eps=eps,
             target=val_target, method=omp_method)
-    if strategy == "craig":
-        return craig_lib.craig(proxies, k)
+    if strategy in _CRAIG_METHODS:
+        return craig_lib.craig(proxies, k, method=_CRAIG_METHODS[strategy],
+                               key=key)
     if strategy == "craig-pb":
         return craig_lib.craig_pb(proxies, batch_size,
                                   max(k // batch_size, 1))

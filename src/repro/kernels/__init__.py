@@ -4,6 +4,9 @@ Layout (per kernel): <name>.py holds the pl.pallas_call + BlockSpec tiling,
 ref.py the pure-jnp oracles, ops.py the backend-aware jit'd dispatch.
 """
 
-from repro.kernels.ops import corr, hidden_grad, lastlayer_grad, set_backend, sqdist
+from repro.kernels.ops import (corr, fl_gain_argmax, fl_gain_argmax_otf,
+                               hidden_grad, lastlayer_grad, set_backend,
+                               sqdist)
 
-__all__ = ["corr", "sqdist", "lastlayer_grad", "hidden_grad", "set_backend"]
+__all__ = ["corr", "sqdist", "fl_gain_argmax", "fl_gain_argmax_otf",
+           "lastlayer_grad", "hidden_grad", "set_backend"]

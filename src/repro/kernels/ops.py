@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import corr as corr_kernel
+from repro.kernels import fl_gain as fl_gain_kernel
 from repro.kernels import lastlayer_grad as llg_kernel
 from repro.kernels import ref
 from repro.kernels import sqdist as sqdist_kernel
@@ -61,6 +62,40 @@ def corr_argmax(colcache: jax.Array, w: jax.Array, base: jax.Array,
     return corr_kernel.corr_argmax(colcache, w, base, mask,
                                    absolute=absolute,
                                    interpret=(mode == "interpret"))
+
+
+def fl_gain_argmax(sim: jax.Array, cover: jax.Array, mask: jax.Array
+                   ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Facility-location gain scan + masked argmax (resident similarity).
+
+    Returns (gains (n,), index (), value ()).  One streaming pass over the
+    similarity on TPU (the per-round ``(n, n)`` maximum temporary of the
+    naive greedy never exists); the jnp reference fuses the relu into the
+    column reduction on CPU.
+    """
+    mode = _mode()
+    if mode == "ref":
+        return ref.fl_gain_argmax_ref(sim, cover, mask)
+    return fl_gain_kernel.fl_gain_argmax(sim, cover, mask,
+                                         interpret=(mode == "interpret"))
+
+
+def fl_gain_argmax_otf(grads: jax.Array, cover: jax.Array,
+                       row_ok: jax.Array, mask: jax.Array, l_max: jax.Array
+                       ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Gain scan with tile-on-the-fly similarity from ``grads`` (n, d).
+
+    Same contract as ``fl_gain_argmax`` but the (n, n) similarity is never
+    materialized in any memory space — the kernel (and the blocked jnp
+    reference) reconstruct ``s_ij = (l_max - ||g_i - g_j||) * row_ok_i``
+    tile by tile.  ``l_max`` must upper-bound all pairwise distances.
+    """
+    mode = _mode()
+    if mode == "ref":
+        return ref.fl_gain_argmax_otf_ref(grads, cover, row_ok, mask, l_max)
+    return fl_gain_kernel.fl_gain_argmax_otf(
+        grads, cover, row_ok, mask, l_max,
+        interpret=(mode == "interpret"))
 
 
 def sqdist(a: jax.Array, b: jax.Array) -> jax.Array:

@@ -35,6 +35,85 @@ def corr_argmax_ref(colcache: jax.Array, w: jax.Array, base: jax.Array,
     return idx, scores[idx]
 
 
+def fl_gain_argmax_ref(sim: jax.Array, cover: jax.Array, mask: jax.Array
+                       ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Facility-location gain scan (CRAIG greedy, resident similarity).
+
+    sim (n, n), cover (n,), mask (n,) bool ->
+    (gains (n,) f32 with gain_j = sum_i relu(s_ij - cover_i), masked argmax
+    index i32 (), max gain f32 ()).  Gains are raw (unmasked); ties resolve
+    to the lowest index (jnp.argmax semantics) and an all-False mask yields
+    (0, -inf).  XLA fuses the relu into the column reduction, so no
+    (n, n) temporary materializes on the reference path either.
+    """
+    gains = jnp.sum(
+        jnp.maximum(sim.astype(jnp.float32)
+                    - cover.astype(jnp.float32)[:, None], 0.0),
+        axis=0,
+    )
+    masked = jnp.where(mask, gains, -jnp.inf)
+    idx = jnp.argmax(masked).astype(jnp.int32)
+    return gains, idx, masked[idx]
+
+
+def fl_gains_cols_ref(cand: jax.Array, cand_sqn: jax.Array,
+                      grads: jax.Array, sqnorms: jax.Array,
+                      cover: jax.Array, row_ok: jax.Array,
+                      l_max: jax.Array, block: int = 256) -> jax.Array:
+    """FL gains for an explicit candidate slice, blocked over coverage
+    rows: cand (m, d) against the pool grads (n, d) -> (m,) gains with
+    ``gain_j = Σ_i relu((l_max - ||g_i - c_j||)·row_ok_i − cover_i)``,
+    peak memory O(block·m).  The single copy of the strip computation:
+    the full scan below runs it with cand = grads, the lazy engine's
+    block refresh and the pmap-sharded scan run it on slices — keeping
+    every on-the-fly gain bit-for-bit reduction-order-identical, which
+    the lazy certification margin assumes.
+    """
+    n, d = grads.shape
+    g = grads.astype(jnp.float32)
+    lm = jnp.asarray(l_max, jnp.float32)
+    nb = -(-n // block)
+    pad = nb * block - n
+    gp = jnp.pad(g, ((0, pad), (0, 0)))
+    sqnp = jnp.pad(sqnorms, (0, pad))
+    cp = jnp.pad(cover.astype(jnp.float32), (0, pad))
+    okp = jnp.pad(row_ok.astype(jnp.float32), (0, pad))
+    cand = cand.astype(jnp.float32)
+
+    def body(b, gains):
+        lo = b * block
+        rows = jax.lax.dynamic_slice(gp, (lo, 0), (block, d))
+        rn = jax.lax.dynamic_slice(sqnp, (lo,), (block,))
+        cv = jax.lax.dynamic_slice(cp, (lo,), (block,))
+        ok = jax.lax.dynamic_slice(okp, (lo,), (block,))
+        d2 = rn[:, None] + cand_sqn[None, :] - 2.0 * (rows @ cand.T)
+        s = (lm - jnp.sqrt(jnp.maximum(d2, 0.0))) * ok[:, None]
+        return gains + jnp.sum(jnp.maximum(s - cv[:, None], 0.0), axis=0)
+
+    return jax.lax.fori_loop(0, nb, body,
+                             jnp.zeros((cand.shape[0],), jnp.float32))
+
+
+def fl_gain_argmax_otf_ref(grads: jax.Array, cover: jax.Array,
+                           row_ok: jax.Array, mask: jax.Array,
+                           l_max: jax.Array, block: int = 256
+                           ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """On-the-fly twin of ``fl_gain_argmax_ref``: same outputs, but the
+    similarity ``s_ij = (l_max - ||g_i - g_j||) * row_ok_i`` is produced in
+    (block, n) row strips from grads (n, d) — the (n, n) matrix never
+    materializes, which is the whole point of this code path (it doubles
+    as the off-TPU dispatch target at pool sizes where a resident
+    similarity would be GBs).
+    """
+    g = grads.astype(jnp.float32)
+    sqn = jnp.sum(g * g, axis=1)
+    gains = fl_gains_cols_ref(g, sqn, g, sqn, cover, row_ok, l_max,
+                              block=block)
+    masked = jnp.where(mask, gains, -jnp.inf)
+    idx = jnp.argmax(masked).astype(jnp.int32)
+    return gains, idx, masked[idx]
+
+
 def sqdist_ref(a: jax.Array, b: jax.Array) -> jax.Array:
     """Pairwise squared euclidean distances  (n, d), (m, d) -> (n, m), f32.
 

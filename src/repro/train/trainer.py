@@ -129,7 +129,8 @@ class AdaptiveTrainer:
         # across classes); per-class GRAD-MATCH/CRAIG use the per-gradient
         # proxy within each class (paper §4).
         per_class_ok = not tc.is_valid and tc.per_class
-        proxies = pcg if (tc.strategy in ("gradmatch", "craig")
+        proxies = pcg if (tc.strategy in ("gradmatch", "craig",
+                                          "craig-lazy", "craig-stochastic")
                           and per_class_ok) else bias
         sel = sel_lib.select(
             tc.strategy, key, proxies, k,

@@ -1,0 +1,248 @@
+"""Differential parity harness for the greedy engine (DESIGN.md §5).
+
+The naive dense greedy (``fl_greedy(method="dense")``, the seed CRAIG
+formulation) is the oracle; the certified lazy engine must select
+*index-identical* subsets across an (n, k, B) grid including degenerate
+pools — duplicate rows, all-equal similarities (pure tie-breaking),
+masked pools, k >= n — for both the resident-similarity and the
+tile-on-the-fly scans.  Seeded ``numpy`` randomness only, mirroring
+``test_omp_parity.py``.
+
+Also covered: the submodularity certificate (accepted per-round gains are
+non-increasing), stochastic-greedy seeded determinism, the pmap-sharded
+gain scan, and the CRAIG/GLISTER wrappers on top of the engine.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import greedy as greedy_lib
+from repro.core.craig import craig, pairwise_sim
+from repro.core.glister import glister
+
+
+def _pool(seed, n, d):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((n, d)).astype(np.float32))
+
+
+def _assert_index_parity(a, b, what):
+    np.testing.assert_array_equal(np.asarray(a.indices),
+                                  np.asarray(b.indices),
+                                  err_msg=f"{what}: indices differ")
+    np.testing.assert_array_equal(np.asarray(a.mask), np.asarray(b.mask),
+                                  err_msg=f"{what}: masks differ")
+
+
+GRID = [
+    # (seed, n, d, k, B) — B crossing and not crossing n, k near and past n
+    (0, 96, 12, 16, 8),
+    (1, 160, 24, 40, 16),
+    (2, 200, 8, 24, 64),
+    (3, 64, 16, 96, 32),     # k > n: the exhausted-pool tail must agree
+    (4, 50, 6, 50, 4),       # k == n, tiny refresh block
+]
+
+
+@pytest.mark.parametrize("seed,n,d,k,B", GRID)
+def test_lazy_matches_dense_random_pools(seed, n, d, k, B):
+    g = _pool(seed, n, d)
+    dense = greedy_lib.fl_greedy(g, k, method="dense")
+    lazy = greedy_lib.fl_greedy(g, k, method="lazy", block=B)
+    _assert_index_parity(dense, lazy, f"lazy vs dense {(n, d, k, B)}")
+    np.testing.assert_allclose(np.asarray(lazy.cover),
+                               np.asarray(dense.cover), rtol=1e-5,
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("seed,n,d,k,B", GRID)
+def test_lazy_otf_matches_dense(seed, n, d, k, B):
+    """Tile-on-the-fly scan (no resident similarity) vs the dense oracle,
+    under the same explicit L_max offset."""
+    g = _pool(seed, n, d)
+    lm = greedy_lib.default_l_max(g)
+    dense = greedy_lib.fl_greedy(g, k, method="dense", l_max=lm)
+    otf = greedy_lib.fl_greedy(g, k, method="lazy", block=B, l_max=lm,
+                               on_the_fly=True)
+    _assert_index_parity(dense, otf, f"otf-lazy vs dense {(n, d, k, B)}")
+
+
+def test_lazy_matches_dense_duplicate_rows():
+    """Exactly tied gains: lowest-index tie-breaking must agree."""
+    rng = np.random.default_rng(10)
+    g = rng.standard_normal((80, 12)).astype(np.float32)
+    g[1::2] = g[::2]                       # every row duplicated
+    for B in (4, 16, 80):
+        dense = greedy_lib.fl_greedy(jnp.asarray(g), 24, method="dense")
+        lazy = greedy_lib.fl_greedy(jnp.asarray(g), 24, method="lazy",
+                                    block=B)
+        _assert_index_parity(dense, lazy, f"duplicates B={B}")
+        sel = np.asarray(lazy.indices)[np.asarray(lazy.mask)]
+        assert len(sel) == len(set(sel.tolist()))
+
+
+def test_lazy_matches_dense_all_equal_similarity():
+    """Identical rows -> every pairwise distance 0 -> all gains exactly
+    equal every round: certification can never fire and the rescan path
+    must reproduce jnp.argmax order (0, 1, 2, ...)."""
+    rng = np.random.default_rng(11)
+    g = np.tile(rng.standard_normal((1, 8)).astype(np.float32), (50, 1))
+    dense = greedy_lib.fl_greedy(jnp.asarray(g), 10, method="dense")
+    lazy = greedy_lib.fl_greedy(jnp.asarray(g), 10, method="lazy", block=4)
+    _assert_index_parity(dense, lazy, "all-equal similarity")
+    np.testing.assert_array_equal(np.asarray(lazy.indices), np.arange(10))
+    assert lazy.stats.certified_rounds == 0     # ties always fail closed
+
+
+def test_lazy_matches_dense_masked_pool():
+    rng = np.random.default_rng(12)
+    g = _pool(12, 120, 16)
+    valid = jnp.asarray(rng.random(120) < 0.4)
+    dense = greedy_lib.fl_greedy(g, 20, method="dense", valid=valid)
+    lazy = greedy_lib.fl_greedy(g, 20, method="lazy", valid=valid, block=16)
+    _assert_index_parity(dense, lazy, "masked pool")
+    sel = np.asarray(lazy.indices)[np.asarray(lazy.mask)]
+    assert np.asarray(valid)[sel].all()
+
+
+def test_k_exceeds_valid_pool_masks_tail():
+    """k >= #valid: both tiers stop growing instead of duplicating (the
+    seed greedy re-selected candidate 0 forever)."""
+    g = _pool(13, 40, 8)
+    valid = jnp.asarray(np.arange(40) < 7)
+    for method in ("dense", "lazy"):
+        res = greedy_lib.fl_greedy(g, 16, method=method, valid=valid,
+                                   block=8)
+        assert int(np.asarray(res.mask).sum()) == 7, method
+        sel = np.asarray(res.indices)[np.asarray(res.mask)]
+        assert len(sel) == len(set(sel.tolist()))
+        assert (np.asarray(res.indices)[~np.asarray(res.mask)] == -1).all()
+
+
+@pytest.mark.parametrize("seed,n,d,k,B", GRID[:3])
+def test_accepted_gains_nonincreasing(seed, n, d, k, B):
+    """Submodularity certificate: the gain accepted in round t+1 can never
+    exceed the gain accepted in round t (coverage only grows)."""
+    g = _pool(seed, n, d)
+    for method in ("dense", "lazy"):
+        res = greedy_lib.fl_greedy(g, k, method=method, block=B)
+        gains = np.asarray(res.gains)[np.asarray(res.mask)]
+        assert (np.diff(gains) <= 1e-4 * (1 + np.abs(gains[:-1]))).all(), \
+            (method, gains)
+
+
+def test_lazy_certifies_most_rounds_on_random_pools():
+    """The engine only pays for rescans when certification fails; on an
+    i.i.d. pool the overwhelming majority of rounds must certify (this is
+    the entire performance claim — see BENCH_selection.json)."""
+    g = _pool(21, 512, 32)
+    res = greedy_lib.fl_greedy(g, 128, method="lazy", block=32)
+    s = res.stats
+    assert s.rounds == 128
+    assert s.certified_rounds >= 0.8 * (s.rounds - 1), s
+    assert s.rescans <= 0.2 * s.rounds + 1, s
+
+
+def test_stochastic_seeded_determinism():
+    g = _pool(14, 200, 16)
+    key = jax.random.PRNGKey(5)
+    a = greedy_lib.fl_greedy(g, 24, method="stochastic", key=key, sample=16)
+    b = greedy_lib.fl_greedy(g, 24, method="stochastic", key=key, sample=16)
+    np.testing.assert_array_equal(np.asarray(a.indices),
+                                  np.asarray(b.indices))
+    c = greedy_lib.fl_greedy(g, 24, method="stochastic",
+                             key=jax.random.PRNGKey(6), sample=16)
+    sel = np.asarray(c.indices)[np.asarray(c.mask)]
+    assert len(sel) == len(set(sel.tolist()))       # never duplicates
+    # full-pool sample degenerates to the exact greedy
+    d = greedy_lib.fl_greedy(g, 24, method="stochastic", key=key,
+                             sample=200)
+    e = greedy_lib.fl_greedy(g, 24, method="dense")
+    _assert_index_parity(e, d, "stochastic sample=n vs dense")
+
+
+def test_pmap_gain_scan_matches_dense():
+    """The pmap-sharded per-round gain scan (core/distributed.py) elects
+    the same medoids as the dense oracle under a shared L_max."""
+    from repro.core.distributed import fl_greedy_pmap
+
+    g = _pool(15, 96, 12)
+    lm = greedy_lib.default_l_max(g)
+    dense = greedy_lib.fl_greedy(g, 12, method="dense", l_max=lm)
+    pm = fl_greedy_pmap(g, 12, l_max=lm)
+    _assert_index_parity(dense, pm, "pmap scan vs dense")
+
+
+# ---------------------------------------------------------------------------
+# the CRAIG / GLISTER wrappers on top of the engine
+# ---------------------------------------------------------------------------
+
+def test_craig_lazy_full_result_parity():
+    """craig(method='lazy') must reproduce craig(method='dense') exactly:
+    indices, weights, and the facility-location objective."""
+    g = _pool(16, 150, 20)
+    a = craig(g, 30, method="dense")
+    b = craig(g, 30, method="lazy")
+    _assert_index_parity(a, b, "craig lazy vs dense")
+    np.testing.assert_allclose(np.asarray(a.weights), np.asarray(b.weights),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(float(a.err), float(b.err), rtol=1e-5)
+
+
+def test_craig_objective_excludes_invalid_rows():
+    """Zeroed-out rows demand no coverage: the returned objective must not
+    count them (the seed implementation charged max(sim) per invalid
+    row)."""
+    g = _pool(17, 60, 8)
+    valid = jnp.asarray(np.arange(60) < 40)
+    sel = craig(g, 10, valid=valid, l_max=10.0)
+    # All-valid run over just the valid rows gives the same deficit.
+    sel_sub = craig(g[:40], 10, l_max=10.0)
+    np.testing.assert_allclose(float(sel.err), float(sel_sub.err),
+                               rtol=1e-4)
+
+
+def test_pairwise_sim_explicit_l_max_offsets_consistently():
+    g = _pool(18, 30, 6)
+    base = pairwise_sim(g)
+    shifted = pairwise_sim(g, l_max=7.5)
+    dist = jnp.max(base) - base
+    np.testing.assert_allclose(np.asarray(shifted), np.asarray(7.5 - dist),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_craig_otf_never_needs_resident_sim():
+    """on_the_fly=True runs end-to-end from grads alone (pool sizes where
+    the (n, n) matrix would not fit) and matches the dense oracle under
+    the same offset."""
+    g = _pool(19, 180, 24)
+    lm = float(greedy_lib.default_l_max(g))
+    a = craig(g, 20, method="dense", l_max=lm)
+    b = craig(g, 20, method="lazy", l_max=lm, on_the_fly=True)
+    _assert_index_parity(a, b, "craig otf vs dense")
+    np.testing.assert_allclose(np.asarray(a.weights), np.asarray(b.weights),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_glister_on_engine_unchanged_semantics():
+    """GLISTER through modular_greedy: uniform weights, no duplicates, and
+    the first pick is the plain argmax of g @ v."""
+    g = _pool(20, 64, 12)
+    tgt = jnp.sum(g, axis=0)
+    sel = glister(g, tgt, 8)
+    idx = np.asarray(sel.indices)[np.asarray(sel.mask)]
+    assert len(idx) == len(set(idx.tolist())) == 8
+    assert idx[0] == int(jnp.argmax(g @ tgt))
+    w = np.asarray(sel.weights)[np.asarray(sel.mask)]
+    np.testing.assert_allclose(w, np.full(8, 1 / 8), rtol=1e-5)
+
+
+def test_glister_k_exceeds_valid_pool():
+    g = _pool(22, 20, 6)
+    valid = jnp.asarray(np.arange(20) < 5)
+    sel = glister(g, jnp.sum(g, axis=0), 12, valid=valid)
+    assert int(np.asarray(sel.mask).sum()) == 5
+    idx = np.asarray(sel.indices)[np.asarray(sel.mask)]
+    assert np.asarray(valid)[idx].all()

@@ -12,6 +12,7 @@ import pytest
 
 from repro.kernels import ref
 from repro.kernels.corr import corr, corr_argmax
+from repro.kernels.fl_gain import fl_gain_argmax, fl_gain_argmax_otf
 from repro.kernels.lastlayer_grad import hidden_grad_fused, lastlayer_grad
 from repro.kernels.sqdist import sqdist
 
@@ -125,6 +126,98 @@ def test_sqdist_self_diagonal_zero():
     a = jax.random.normal(_key(50, 64, 4), (50, 64))
     d = sqdist(a, a, interpret=True)
     np.testing.assert_allclose(jnp.diag(d), np.zeros(50), atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# fl_gain_argmax: fused facility-location gain scan (CRAIG greedy)
+# ---------------------------------------------------------------------------
+
+def _fl_case(seed, n, d):
+    g = jax.random.normal(_key(seed, n, d), (n, d))
+    sq = jnp.sum(g**2, axis=1)
+    dist = jnp.sqrt(jnp.maximum(
+        sq[:, None] + sq[None, :] - 2.0 * g @ g.T, 0.0))
+    lm = jnp.max(dist)
+    sim = lm - dist
+    cover = jnp.abs(jax.random.normal(_key(seed, n, d + 1), (n,)))
+    mask = jax.random.bernoulli(_key(seed, n, d + 2), 0.7, (n,))
+    return g, sim, lm, cover, mask
+
+
+@pytest.mark.parametrize("n", [1, 9, 128, 300])
+@pytest.mark.parametrize("d", [4, 70])
+def test_fl_gain_argmax_matches_ref(n, d):
+    _, sim, _, cover, mask = _fl_case(30, n, d)
+    gg, gi, gv = fl_gain_argmax(sim, cover, mask, interpret=True)
+    rg, ri, rv = ref.fl_gain_argmax_ref(sim, cover, mask)
+    np.testing.assert_allclose(gg, rg, rtol=1e-4, atol=1e-4)
+    if np.isfinite(float(rv)):
+        assert int(gi) == int(ri)
+        np.testing.assert_allclose(float(gv), float(rv), rtol=1e-4,
+                                   atol=1e-4)
+    else:
+        assert int(gi) == int(ri) == 0 and float(gv) == float(rv)
+
+
+@pytest.mark.parametrize("n", [1, 9, 150, 260])
+@pytest.mark.parametrize("d", [3, 64, 600])
+def test_fl_gain_argmax_otf_matches_resident(n, d):
+    """The on-the-fly kernel (similarity reconstructed from grads inside
+    the loop) must agree with the resident ref to float tolerance."""
+    g, sim, lm, cover, mask = _fl_case(31, n, d)
+    rok = jnp.ones((n,), bool)
+    rg, ri, _ = ref.fl_gain_argmax_ref(sim, cover, mask)
+    og, oi, _ = ref.fl_gain_argmax_otf_ref(g, cover, rok, mask, lm,
+                                           block=64)
+    np.testing.assert_allclose(og, rg, rtol=1e-3, atol=1e-3)
+    kg, ki, _ = fl_gain_argmax_otf(g, cover, rok, mask, lm, interpret=True)
+    np.testing.assert_allclose(kg, rg, rtol=1e-3, atol=1e-3)
+    if np.isfinite(float(np.max(np.where(np.asarray(mask), rg, -np.inf)))):
+        assert int(oi) == int(ri)
+        assert int(ki) == int(ri)
+
+
+def test_fl_gain_argmax_tie_breaks_to_lowest_index():
+    """All-equal similarity (duplicate candidates): both the kernel and
+    the ref must return the first unmasked column, across column tiles."""
+    n = 300
+    sim = jnp.ones((n, n))
+    cover = jnp.zeros((n,))
+    mask = jnp.ones((n,), bool).at[0].set(False)
+    ki = int(fl_gain_argmax(sim, cover, mask, interpret=True)[1])
+    ri = int(ref.fl_gain_argmax_ref(sim, cover, mask)[1])
+    assert ki == ri == 1
+    # tie inside a later column tile only
+    sim2 = sim.at[:, 200].set(2.0).at[:, 260].set(2.0)
+    ki2 = int(fl_gain_argmax(sim2, cover, mask, interpret=True)[1])
+    ri2 = int(ref.fl_gain_argmax_ref(sim2, cover, mask)[1])
+    assert ki2 == ri2 == 200
+
+
+def test_fl_gain_argmax_all_masked():
+    n = 140
+    _, sim, _, cover, _ = _fl_case(32, n, 8)
+    mask = jnp.zeros((n,), bool)
+    kg, ki, kv = fl_gain_argmax(sim, cover, mask, interpret=True)
+    rg, ri, rv = ref.fl_gain_argmax_ref(sim, cover, mask)
+    assert int(ki) == int(ri) == 0
+    assert float(kv) == float(rv) == -np.inf
+    np.testing.assert_allclose(kg, rg, rtol=1e-4, atol=1e-4)
+
+
+def test_fl_gain_otf_invalid_rows_demand_no_coverage():
+    """row_ok=False rows must contribute exactly 0 gain — the on-the-fly
+    equivalent of zeroing similarity rows."""
+    n, d = 60, 8
+    g, sim, lm, cover, _ = _fl_case(33, n, d)
+    rok = jnp.asarray(np.arange(n) < 40)
+    mask = jnp.ones((n,), bool)
+    og, _, _ = ref.fl_gain_argmax_otf_ref(g, cover, rok, mask, lm, block=16)
+    sim_z = sim * rok[:, None].astype(sim.dtype)
+    rg, _, _ = ref.fl_gain_argmax_ref(sim_z, cover, mask)
+    np.testing.assert_allclose(og, rg, rtol=1e-3, atol=1e-3)
+    kg, _, _ = fl_gain_argmax_otf(g, cover, rok, mask, lm, interpret=True)
+    np.testing.assert_allclose(kg, rg, rtol=1e-3, atol=1e-3)
 
 
 # ---------------------------------------------------------------------------
