@@ -13,25 +13,71 @@ import jax
 REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 
 
+def _row_table(row: dict) -> str | None:
+    """The table a result row belongs to.
+
+    New rows carry it explicitly (``make_recorder`` tags them); rows from
+    files committed before the tag existed are inferred from their field
+    signature so a merge never mistakes one section for another.
+    """
+    if "table" in row:
+        return row["table"]
+    strategy = str(row.get("strategy", ""))
+    if strategy.startswith("gradmatch-stream"):
+        return "selection_stream"
+    if any(key in row for key in ("rescans", "sample", "on_the_fly")):
+        return "selection_greedy"
+    if "strategy" in row:
+        return "selection_time"
+    return "kernel"
+
+
 def persist(name: str, rows: list[dict]) -> pathlib.Path:
-    """Write one section's result rows to ``BENCH_<name>.json`` at the repo
-    root.  The file is overwritten per run and committed, so the perf
-    trajectory across PRs lives in its git history (diff-able per PR)."""
+    """Merge one run's result rows into ``BENCH_<name>.json`` by table.
+
+    Rows are grouped by their recorder table (``selection_time``,
+    ``selection_stream``, ...).  Tables present in this run **replace**
+    their previous rows; tables absent keep the committed ones — so a
+    partial run (``--quick``, ``--only selection``, or a single section
+    crashing) no longer wipes the unrelated sections the parity gate
+    reads its baselines from.  The file stays a flat ``rows`` list
+    (sorted by table) for existing consumers; ``table_timestamps``
+    records when each section was last refreshed."""
     path = REPO_ROOT / f"BENCH_{name}.json"
+    now = time.strftime("%Y-%m-%dT%H:%M:%S")
+    new_tables = {_row_table(r) for r in rows}
+    kept: list[dict] = []
+    table_stamps: dict[str, str] = {}
+    if path.exists():
+        try:
+            old = json.loads(path.read_text())
+        except (json.JSONDecodeError, OSError):
+            old = {}
+        table_stamps = dict(old.get("table_timestamps", {}))
+        kept = [r for r in old.get("rows", [])
+                if _row_table(r) not in new_tables]
+    merged = kept + rows
+    merged.sort(key=lambda r: str(_row_table(r)))
+    for t in new_tables:
+        table_stamps[str(t)] = now
     payload = {
-        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "timestamp": now,
         "backend": jax.default_backend(),
-        "rows": rows,
+        "table_timestamps": table_stamps,
+        "rows": merged,
     }
     path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
     return path
 
 
 def make_recorder(table: str, rows: list[dict]) -> Callable:
-    """emit() + collect into ``rows`` (the list persist() later writes)."""
+    """emit() + collect into ``rows`` (the list persist() later writes).
+
+    Each row is tagged with its ``table`` so ``persist`` can merge runs
+    section-wise instead of overwriting the whole file."""
     def record(**fields):
         emit(table, **fields)
-        rows.append(fields)
+        rows.append(dict(fields, table=table))
     return record
 
 

@@ -174,11 +174,32 @@ def check_greedy_regression(dense_budget_ms=15000.0) -> bool:
     return ok
 
 
+def check_serve_smoke() -> bool:
+    """Serve-selection smoke (DESIGN.md §6): 8 queued requests over 2
+    pools drain through the micro-batching scheduler, plus one anytime
+    k-extension — the driver self-checks both differential claims
+    (batched == per-request ``omp_select``; extension == one-shot k')
+    and reports them."""
+    from repro.launch import serve_selection
+
+    report = serve_selection.main([
+        "--smoke", "--requests", "8", "--pools", "2", "--tenants", "2",
+        "--pool-size", "1024", "--dim", "32", "--k", "48",
+        "--k-extend", "80"])
+    print(f"parity_gate,check=serve-smoke,requests={report['requests']},"
+          f"batches={report['batches_run']},"
+          f"batched_ok={report['batched_ok']},"
+          f"extension_ok={report['extension_ok']},ok={report['ok']}",
+          flush=True)
+    return bool(report["ok"])
+
+
 def main() -> int:
     ok = check_streaming_parity()
     ok &= check_incremental_regression()
     ok &= check_greedy_parity()
     ok &= check_greedy_regression()
+    ok &= check_serve_smoke()
     print(f"parity_gate,{'PASS' if ok else 'FAIL'}", flush=True)
     return 0 if ok else 1
 

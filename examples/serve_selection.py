@@ -1,0 +1,32 @@
+"""Selection-as-a-service example: multi-tenant batched selection.
+
+Mirrors ``examples/serve_decode.py`` for the selection side: a
+``SelectionService`` with two registered pools serves a queue of eight
+requests from two tenants (same-pool requests micro-batch into one
+multi-target OMP solve), then one client extends its budget k -> k'
+through an anytime session — a certified resume of the checkpointed
+solver state, not a re-solve.
+
+Run:  PYTHONPATH=src python examples/serve_selection.py
+"""
+
+import argparse
+
+from repro.launch import serve_selection as serve_driver
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pool-size", type=int, default=2048)
+    ap.add_argument("--k", type=int, default=128)
+    args = ap.parse_args(argv)
+    report = serve_driver.main([
+        "--requests", "8", "--pools", "2", "--tenants", "2",
+        "--pool-size", str(args.pool_size), "--k", str(args.k),
+        "--k-extend", str(args.k + args.k // 2), "--smoke",
+    ])
+    return 0 if report["ok"] else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -239,28 +239,18 @@ def _grow_prefix(st: OMPIncState, width: int, keep_cols: bool) -> OMPIncState:
     )
 
 
-def _omp_select_incremental(grads, target, k, lam, eps, nnls_iters, positive,
-                            valid, block):
-    """Incremental-Gram OMP: cached correlations, no per-round rebuilds.
+def _inc_body_factory(grads, target, c0, valid, lam, eps, nnls_iters,
+                      absolute):
+    """Round-body factory shared by every incremental-Gram consumer.
 
-    Two statically-chosen regimes per block of rounds, both O(t)-incremental
-    (the ``(k, d)`` active matrix is never re-gathered and the Gram never
-    rebuilt), differing only in which cached factor scores candidates:
-
-    * wide-proxy (P <= d): scores = c0 - C @ w over the ``(n, P)`` column
-      cache; the new Gram row is a free read ``C[e, :]``.  O(n·P) < O(n·d)
-      per round.
-    * narrow-proxy (d < P): scores = G @ r with the residual maintained
-      from the cached active rows (r = g_tgt - w^T R, O(P·d)); the new
-      Gram row is ``R @ g_e``.  O(n·d) < O(n·P) per round.
-
-    Both feed the same fused ``corr_argmax`` kernel (scores never hit HBM
-    on TPU): the wide call is (C, w, c0), the narrow call is (G, -r, 0).
+    ``_omp_select_incremental`` (one-shot), the anytime session engine
+    (``omp_session_start`` / ``omp_session_extend``) and their tests all
+    run the body this returns — one copy of the cached-correlation round
+    update, so a session resume is bit-identical to the one-shot rounds it
+    skips.
     """
-    n, d = grads.shape
-    c0 = ops.corr(grads, target)        # (n,), computed exactly once
+    n = grads.shape[0]
     zeros_n = jnp.zeros((n,), dtype=jnp.float32)
-    absolute = not positive
 
     def make_body(use_cols: bool):
         def body(t, st: OMPIncState):
@@ -318,7 +308,12 @@ def _omp_select_incremental(grads, target, k, lam, eps, nnls_iters, positive,
                                tcorr, rows, resid, err)
         return body
 
-    st = OMPIncState(
+    return make_body
+
+
+def _empty_inc_state(k: int, n: int, d: int,
+                     target: jax.Array) -> OMPIncState:
+    return OMPIncState(
         indices=jnp.full((k,), -1, dtype=jnp.int32),
         mask=jnp.zeros((k,), dtype=bool),
         weights=jnp.zeros((0,), dtype=jnp.float32),
@@ -330,6 +325,31 @@ def _omp_select_incremental(grads, target, k, lam, eps, nnls_iters, positive,
         residual=target,
         err=jnp.sum(target**2) + jnp.float32(0.0),
     )
+
+
+def _omp_select_incremental(grads, target, k, lam, eps, nnls_iters, positive,
+                            valid, block):
+    """Incremental-Gram OMP: cached correlations, no per-round rebuilds.
+
+    Two statically-chosen regimes per block of rounds, both O(t)-incremental
+    (the ``(k, d)`` active matrix is never re-gathered and the Gram never
+    rebuilt), differing only in which cached factor scores candidates:
+
+    * wide-proxy (P <= d): scores = c0 - C @ w over the ``(n, P)`` column
+      cache; the new Gram row is a free read ``C[e, :]``.  O(n·P) < O(n·d)
+      per round.
+    * narrow-proxy (d < P): scores = G @ r with the residual maintained
+      from the cached active rows (r = g_tgt - w^T R, O(P·d)); the new
+      Gram row is ``R @ g_e``.  O(n·d) < O(n·P) per round.
+
+    Both feed the same fused ``corr_argmax`` kernel (scores never hit HBM
+    on TPU): the wide call is (C, w, c0), the narrow call is (G, -r, 0).
+    """
+    n, d = grads.shape
+    c0 = ops.corr(grads, target)        # (n,), computed exactly once
+    make_body = _inc_body_factory(grads, target, c0, valid, lam, eps,
+                                  nnls_iters, absolute=not positive)
+    st = _empty_inc_state(k, n, d, target)
     for lo in range(0, k, block):
         hi = min(lo + block, k)
         use_cols = hi <= d
@@ -387,6 +407,346 @@ def omp_select_dense(grads, target, k, lam=0.5, eps=1e-10, nnls_iters=50,
     return omp_select(grads, target, k, lam=lam, eps=eps,
                       nnls_iters=nnls_iters, positive=positive, valid=valid,
                       corr_fn=corr_fn, method="dense")
+
+
+# ---------------------------------------------------------------------------
+# anytime sessions: checkpointed solves with budget extension k -> k'
+# ---------------------------------------------------------------------------
+
+class OMPAnytimeState(NamedTuple):
+    """Host-side checkpoint of an in-flight incremental OMP solve.
+
+    The serve layer (``repro.serve``) stores one of these per client
+    session so a budget extension ``k -> k'`` is a *resume*: the cached
+    prefix buffers pick up at round ``k`` and only the new rounds run.
+
+    Unlike ``omp_select`` — whose prefix widths depend on the final ``k``
+    through ``hi = min(lo + block, k)`` — the session engine always grows
+    prefixes to **full block multiples**, so the width schedule (and the
+    wide/narrow regime choice) at every round is independent of the budget
+    the caller happened to ask for first.  That makes the resumed rounds
+    bit-identical to the rounds a single ``extend`` straight to ``k'``
+    would run: ``extend(k) ; extend(k')`` and ``extend(k')`` produce the
+    same arrays, and both match a one-shot ``omp_select(k')`` selection
+    index-exactly away from the f32 noise floor (weights to tolerance —
+    the NNLS sees block-padded buffers whose extra rows are exact zeros).
+
+    ``k`` is the rounds solved so far; ``st`` carries the (k,)-capacity
+    index/mask buffers (capacity = ``k`` rounded up to ``block``) plus the
+    prefix-grown caches; ``c0``/``target``/``valid`` are per-session
+    constants so an extension never rescans the pool for them.
+    """
+
+    k: int               # rounds solved so far (static)
+    block: int           # prefix growth quantum (static)
+    st: OMPIncState      # buffers at block-multiple capacity
+    c0: jax.Array        # (n,) G @ g_tgt, computed once at session start
+    target: jax.Array    # (d,)
+    valid: jax.Array     # (n,) bool
+    lam: float
+    eps: float
+    nnls_iters: int
+    positive: bool
+
+    @property
+    def indices(self) -> jax.Array:
+        return self.st.indices[: self.k]
+
+    @property
+    def weights(self) -> jax.Array:
+        return self.st.weights[: self.k]
+
+    @property
+    def mask(self) -> jax.Array:
+        return self.st.mask[: self.k]
+
+    @property
+    def err(self) -> jax.Array:
+        return self.st.err
+
+
+def _block_cap(k: int, block: int) -> int:
+    return max(block * (-(-k // block)), block)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("use_cols", "lam", "eps", "nnls_iters", "absolute"),
+)
+def _run_session_block(grads, target, c0, valid, st: OMPIncState, t0, t1,
+                       use_cols: bool, lam: float, eps: float,
+                       nnls_iters: int, absolute: bool) -> OMPIncState:
+    # t0/t1 are dynamic so arbitrary k -> k' extensions inside one block
+    # width reuse a single compiled program (one per prefix width).
+    body = _inc_body_factory(grads, target, c0, valid, lam, eps, nnls_iters,
+                             absolute)(use_cols)
+    return lax.fori_loop(t0, t1, body, st)
+
+
+def _pad_slots(st: OMPIncState, cap: int) -> OMPIncState:
+    """Grow the full-(k,) index/mask buffers to ``cap`` slots."""
+    pad = cap - st.indices.shape[0]
+    if pad <= 0:
+        return st
+    return st._replace(
+        indices=jnp.pad(st.indices, (0, pad), constant_values=-1),
+        mask=jnp.pad(st.mask, (0, pad)),
+    )
+
+
+def omp_session_start(
+    grads: jax.Array,          # (n, d) candidate pool (shared, not stored)
+    target: jax.Array,         # (d,)
+    k: int,
+    lam: float = 0.5,
+    eps: float = 1e-10,
+    nnls_iters: int = 50,
+    positive: bool = True,
+    valid: jax.Array | None = None,
+    block: int = 128,
+) -> OMPAnytimeState:
+    """Open an anytime OMP session and solve the first ``k`` rounds.
+
+    The pool itself is not captured in the state — callers (the serve
+    registry) own it and pass the *same* array back to
+    ``omp_session_extend``; the session holds everything derived from it.
+    """
+    n, d = grads.shape
+    grads = grads.astype(jnp.float32)
+    target = target.astype(jnp.float32)
+    if valid is None:
+        valid = jnp.ones((n,), dtype=bool)
+    c0 = ops.corr(grads, target)
+    st = _empty_inc_state(_block_cap(k, block), n, d, target)
+    sess = OMPAnytimeState(k=0, block=int(block), st=st, c0=c0,
+                           target=target, valid=valid, lam=float(lam),
+                           eps=float(eps), nnls_iters=int(nnls_iters),
+                           positive=bool(positive))
+    return omp_session_extend(grads, sess, k)
+
+
+def omp_session_extend(grads: jax.Array, sess: OMPAnytimeState,
+                       k_new: int) -> OMPAnytimeState:
+    """Extend a session's budget to ``k_new`` rounds (a resume, not a
+    recompute: only rounds ``[sess.k, k_new)`` execute).
+
+    ``grads`` must be the pool the session was started on.  ``k_new`` may
+    not shrink the budget — the prefix property means a client wanting
+    fewer rounds already has them (``sess.indices[:k_small]`` *is* the
+    ``k_small`` solution), so a smaller ask is a caller bug worth raising.
+    """
+    if k_new < sess.k:
+        raise ValueError(
+            f"cannot shrink an anytime session: have k={sess.k}, asked "
+            f"k'={k_new} (slice indices[:k'] instead — prefix property)")
+    if k_new == sess.k:
+        return sess
+    grads = grads.astype(jnp.float32)
+    d = grads.shape[1]
+    block = sess.block
+    st = _pad_slots(sess.st, _block_cap(k_new, block))
+    for lo in range((sess.k // block) * block, k_new, block):
+        width = lo + block           # full-block width: independent of k
+        use_cols = width <= d
+        if st.weights.shape[0] < width:
+            st = _grow_prefix(st, width, keep_cols=use_cols)
+        t0, t1 = max(lo, sess.k), min(lo + block, k_new)
+        st = _run_session_block(
+            grads, sess.target, sess.c0, sess.valid, st, t0, t1, use_cols,
+            sess.lam, sess.eps, sess.nnls_iters, absolute=not sess.positive)
+    return sess._replace(k=int(k_new), st=st)
+
+
+def session_result(sess: OMPAnytimeState
+                   ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """(indices (k,), weights (k,), mask (k,), err ()) — the same contract
+    as ``omp_select`` at the session's current budget."""
+    return sess.indices, sess.weights, sess.mask, sess.err
+
+
+# ---------------------------------------------------------------------------
+# batched multi-target OMP: one pool scan serves B concurrent targets
+# ---------------------------------------------------------------------------
+
+class OMPBatchState(NamedTuple):
+    """Leading-batch-axis twin of ``OMPIncState`` (see that docstring)."""
+
+    indices: jax.Array   # (B, k) int32
+    mask: jax.Array      # (B, k) bool
+    weights: jax.Array   # (B, P) f32
+    colcache: jax.Array  # (B, n, P) f32
+    gram: jax.Array      # (B, P, P) f32
+    gram_absrow: jax.Array  # (B, P) f32
+    tcorr: jax.Array     # (B, P) f32
+    rows: jax.Array      # (B, P, d) f32
+    residual: jax.Array  # (B, d) f32
+    err: jax.Array       # (B,) f32
+
+
+def _grow_prefix_batched(st: OMPBatchState, width: int,
+                         keep_cols: bool) -> OMPBatchState:
+    pad = width - st.weights.shape[1]
+    z2 = ((0, 0), (0, pad))
+    return OMPBatchState(
+        indices=st.indices,
+        mask=st.mask,
+        weights=jnp.pad(st.weights, z2),
+        colcache=(jnp.pad(st.colcache, ((0, 0), (0, 0), (0, pad)))
+                  if keep_cols else st.colcache),
+        gram=jnp.pad(st.gram, ((0, 0), (0, pad), (0, pad))),
+        gram_absrow=jnp.pad(st.gram_absrow, z2),
+        tcorr=jnp.pad(st.tcorr, z2),
+        rows=jnp.pad(st.rows, ((0, 0), (0, pad), (0, 0))),
+        residual=st.residual,
+        err=st.err,
+    )
+
+
+def _omp_select_batched_incremental(grads, targets, k, lam, eps, nnls_iters,
+                                    positive, valids, block):
+    """Incremental-Gram OMP over ``B`` targets sharing one pool.
+
+    The per-round structure is identical to ``_omp_select_incremental``
+    (same block-quantized prefix widths, same wide/narrow regime choice,
+    same NNLS on cached buffers), but every pool-touching step is batched:
+    the narrow-regime scoring is one ``(n, d) @ (d, B)`` matmul instead of
+    ``B`` matvecs and the new column build is one ``(n, d) @ (d, B)``
+    matmul — the candidate matrix is read once per round *for the whole
+    batch*, which is where the serve scheduler's throughput comes from.
+    Selections match per-target ``omp_select`` index-exactly away from the
+    f32 noise floor (the math is identical; only reduction shapes differ).
+    """
+    n, d = grads.shape
+    bsz = targets.shape[0]
+    # Pool-sized arrays live pool-major (n, B) — the orientation the
+    # shared-operand scan matmul produces natively (see kernels/ref.py).
+    c0_t = ops.corr_batched(grads, targets)        # (n, B), exactly once
+    zeros_nb = jnp.zeros((n, bsz), dtype=jnp.float32)
+    valids_t = valids.T                            # (n, B), hoisted
+    bcol = jnp.arange(bsz, dtype=jnp.int32)
+    bcols_k = jnp.broadcast_to(bcol[:, None], (bsz, k))
+    absolute = not positive
+    take_b = jax.vmap(lambda mat, i: mat[i])       # (B, n, p)[b, e_b]
+    nnls_b = jax.vmap(_nnls_active_cached,
+                      in_axes=(0, 0, 0, 0, 0, None, None))
+
+    def scatter_taken_t(mask, indices):
+        # One 2-D scatter into the (n, B) taken mask; out-of-bounds row
+        # sentinel n drops unused slots (same trick as the single solver).
+        return jnp.zeros((n, bsz), dtype=bool).at[
+            jnp.where(mask, indices, n), bcols_k].set(mask, mode="drop")
+
+    def make_body(use_cols: bool):
+        def body(t, st: OMPBatchState):
+            p = st.weights.shape[1]
+            avail_t = valids_t & ~scatter_taken_t(st.mask, st.indices)
+            if use_cols:
+                e, _ = ops.corr_argmax_batched(st.colcache, st.weights,
+                                               c0_t, avail_t,
+                                               absolute=absolute)
+            else:
+                e, _ = ops.corr_argmax_batched(grads, -st.residual,
+                                               zeros_nb, avail_t,
+                                               absolute=absolute)
+
+            grow = st.err > eps                            # (B,)
+            growf = grow.astype(jnp.float32)
+            indices = st.indices.at[:, t].set(jnp.where(grow, e, -1))
+            mask = st.mask.at[:, t].set(grow)
+            mask_p = mask[:, :p]
+
+            g_e = grads[e] * growf[:, None]                # (B, d)
+            rows = st.rows.at[:, t].set(g_e)
+            if use_cols:
+                newcol = ops.corr_batched(grads, g_e)      # (n, B)
+                colcache = st.colcache.at[:, :, t].set(newcol.T)
+                row_vals = jnp.where(mask_p, take_b(colcache, e),
+                                     0.0) * growf[:, None]
+            else:
+                colcache = st.colcache
+                row_vals = jnp.where(
+                    mask_p, jnp.einsum("bpd,bd->bp", rows, g_e), 0.0)
+            gram = st.gram.at[:, t, :].set(row_vals).at[:, :, t].set(row_vals)
+            absrow = jnp.where(mask_p,
+                               st.gram_absrow + jnp.abs(row_vals), 0.0)
+            absrow = absrow.at[:, t].set(jnp.sum(jnp.abs(row_vals), axis=1))
+            tcorr = st.tcorr.at[:, t].set(c0_t[e, bcol] * growf)
+
+            w = nnls_b(gram, absrow, rows, tcorr, mask_p, lam, nnls_iters)
+            resid = targets - jnp.einsum("bp,bpd->bd", w, rows)
+            err = jnp.sum(resid**2, axis=1) + lam * jnp.sum(w**2, axis=1)
+            return OMPBatchState(indices, mask, w, colcache, gram, absrow,
+                                 tcorr, rows, resid, err)
+        return body
+
+    st = OMPBatchState(
+        indices=jnp.full((bsz, k), -1, dtype=jnp.int32),
+        mask=jnp.zeros((bsz, k), dtype=bool),
+        weights=jnp.zeros((bsz, 0), dtype=jnp.float32),
+        colcache=jnp.zeros((bsz, n, 0), dtype=jnp.float32),
+        gram=jnp.zeros((bsz, 0, 0), dtype=jnp.float32),
+        gram_absrow=jnp.zeros((bsz, 0), dtype=jnp.float32),
+        tcorr=jnp.zeros((bsz, 0), dtype=jnp.float32),
+        rows=jnp.zeros((bsz, 0, d), dtype=jnp.float32),
+        residual=targets,
+        err=jnp.sum(targets**2, axis=1),
+    )
+    for lo in range(0, k, block):
+        hi = min(lo + block, k)      # same prefix schedule as omp_select
+        # Regime choice re-derived for the batch: the column cache is
+        # *per-target* (``B·n·P`` touched per wide round) while the
+        # narrow-regime pool scan is *shared* (``n·d`` once for the whole
+        # batch) — so wide only pays off when ``B·P <= d``, not ``P <= d``.
+        # Same math either way (scores are c0 - C@w == G@r); only the
+        # reduction shapes differ, below the index-parity noise floor.
+        use_cols = hi * bsz <= d
+        st = _grow_prefix_batched(st, hi, keep_cols=use_cols)
+        st = lax.fori_loop(lo, hi, make_body(use_cols), st)
+    return st.indices, st.weights, st.mask, st.err
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "nnls_iters", "positive", "method", "block"),
+)
+def omp_select_batched(
+    grads: jax.Array,          # (n, d) shared candidate pool
+    targets: jax.Array,        # (B, d) one target per concurrent request
+    k: int,
+    lam: float = 0.5,
+    eps: float = 1e-10,
+    nnls_iters: int = 50,
+    positive: bool = True,
+    valid: jax.Array | None = None,   # (B, n) or (n,) availability
+    method: str = "incremental",
+    block: int = 128,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Solve ``B`` OMP problems over one shared pool in a single program.
+
+    Returns ``(indices (B, k), weights (B, k), mask (B, k), err (B,))`` —
+    row ``b`` is what ``omp_select(grads, targets[b], ...)`` returns.  The
+    serve scheduler micro-batches same-pool ``SelectRequest``s through
+    this: B sequential solves become one batched solve whose pool-touching
+    matvecs are shared-operand matmuls (see DESIGN.md §6).
+    """
+    if method not in ("incremental", "dense"):
+        raise ValueError(f"unknown OMP method {method!r}")
+    n, d = grads.shape
+    grads = grads.astype(jnp.float32)
+    targets = targets.astype(jnp.float32)
+    bsz = targets.shape[0]
+    if valid is None:
+        valid = jnp.ones((bsz, n), dtype=bool)
+    elif valid.ndim == 1:
+        valid = jnp.broadcast_to(valid, (bsz, n))
+    if method == "dense":
+        return jax.vmap(
+            lambda t, v: _omp_select_dense(grads, t, k, lam, eps,
+                                           nnls_iters, positive, v, None)
+        )(targets, valid)
+    return _omp_select_batched_incremental(grads, targets, k, lam, eps,
+                                           nnls_iters, positive, valid,
+                                           block)
 
 
 def omp_select_per_class(

@@ -122,7 +122,23 @@ def expand_if_pb(strategy: str, sel: SelectionResult, batch_size: int,
 
 def warm_start_epochs(total_epochs: int, budget_frac: float,
                       kappa: float = 0.5) -> tuple[int, int]:
-    """(T_f full-data epochs, T_s subset epochs) per the paper's split."""
+    """(T_f full-data epochs, T_s subset epochs) per the paper's split.
+
+    The split only makes sense for a genuine subset run: ``budget_frac``
+    is ``k/n`` and must sit in (0, 1) — at >= 1 the "warm start" would be
+    longer than full training (use strategy="full" instead), and the old
+    code silently produced that schedule.  ``kappa`` in (0, 1] scales the
+    total compute; 0 would yield zero subset epochs.
+    """
+    if total_epochs <= 0:
+        raise ValueError(f"total_epochs must be positive, got {total_epochs}")
+    if not 0.0 < budget_frac < 1.0:
+        raise ValueError(
+            f"budget_frac must be in (0, 1), got {budget_frac}; a fraction "
+            ">= 1 makes the warm start longer than full-data training — "
+            "use strategy='full' for a full-data run")
+    if not 0.0 < kappa <= 1.0:
+        raise ValueError(f"kappa must be in (0, 1], got {kappa}")
     t_s = max(int(round(kappa * total_epochs)), 1)
     t_f = int(round(t_s * budget_frac))
     return t_f, t_s
@@ -132,6 +148,26 @@ def warm_start_epochs(total_epochs: int, budget_frac: float,
 class SelectionSchedule:
     select_every: int = 20         # R
     warm_epochs: int = 0           # T_f
+    # Optional: the run length this schedule is meant for.  When given,
+    # a warm start covering the whole run (so *no* selection epoch ever
+    # fires and the trainer silently trains full-data at subset LR) is
+    # rejected here instead of surfacing as a mystery accuracy gap.
+    total_epochs: Optional[int] = None
+
+    def __post_init__(self):
+        if self.select_every <= 0:
+            raise ValueError(
+                f"select_every (R) must be positive, got "
+                f"{self.select_every}; R <= 0 never re-selects")
+        if self.warm_epochs < 0:
+            raise ValueError(
+                f"warm_epochs must be >= 0, got {self.warm_epochs}")
+        if (self.total_epochs is not None
+                and self.warm_epochs >= self.total_epochs):
+            raise ValueError(
+                f"warm_epochs={self.warm_epochs} >= total_epochs="
+                f"{self.total_epochs}: the warm start swallows the whole "
+                "run and no selection epoch ever fires")
 
     def is_selection_epoch(self, epoch: int) -> bool:
         """Selection at the first post-warm epoch, then every R."""

@@ -83,6 +83,25 @@ def array_chunks(pool, chunk_size: int, valid=None) -> Callable[[], Iterator]:
     return chunks
 
 
+def chunked_pool_iter(pool, valid=None) -> Callable[[], Iterator]:
+    """Adapt a ``data.loader.ChunkedPool`` to the ``(chunk, valid)``
+    protocol ``omp_select_streaming`` consumes.
+
+    ``pool.chunks()`` yields ``(x, y, offset)``; the labels are dropped
+    (proxy pools registered with the serve layer are already gradient
+    proxies — raw-data pools go through ``proxies.proxy_chunk_stream``
+    instead).  ``valid`` is an optional full-length (n,) mask sliced per
+    chunk by the offsets the pool reports.
+    """
+
+    def chunks():
+        for x, _, lo in pool.chunks():
+            c = x.shape[0]
+            yield x, (None if valid is None else valid[lo:lo + c])
+
+    return chunks
+
+
 def streaming_target(pool_iter: Callable[[], Iterator]):
     """One pass: ``(sum of valid rows, total row count)`` — eq. (2) target."""
     total = None

@@ -64,6 +64,57 @@ def corr_argmax(colcache: jax.Array, w: jax.Array, base: jax.Array,
                                    interpret=(mode == "interpret"))
 
 
+def corr_batched(grads: jax.Array, vecs: jax.Array) -> jax.Array:
+    """Batched OMP scores  (B, d) against one pool -> **(n, B)** f32.
+
+    The batched-serving scoring step, pool-major (column b is
+    ``corr(grads, vecs[b])`` — the orientation the shared-operand matmul
+    produces without a transpose; see the reference).  On Pallas backends
+    it maps the single-problem ``corr`` kernel over the batch (the
+    kernel's grid carries SMEM state, so a vmap-injected leading grid axis
+    would misindex ``program_id`` — mapping sequential launches is the
+    safe lowering) and transposes the stacked result.
+    """
+    mode = _mode()
+    if mode == "ref":
+        return ref.corr_batched_ref(grads, vecs)
+    interpret = mode == "interpret"
+    out = jax.lax.map(
+        lambda v: corr_kernel.corr(grads, v, interpret=interpret), vecs)
+    return out.T
+
+
+def corr_argmax_batched(mat: jax.Array, w: jax.Array, base_t: jax.Array,
+                        mask_t: jax.Array, *, absolute: bool = False
+                        ) -> tuple[jax.Array, jax.Array]:
+    """Batched fused OMP scoring: per-problem masked argmax of
+    ``base - mat @ w`` with ``mat`` either per-problem ``(B, n, p)`` or a
+    shared pool ``(n, p)``; ``base_t``/``mask_t`` are pool-major
+    ``(n, B)``.  Returns (indices (B,), values (B,)).
+
+    Same Pallas caveat as ``corr_batched``: the fused kernel keeps its
+    running (max, index) in SMEM across a sequential grid, so the batch is
+    mapped over kernel launches (per-problem ``(n,)`` slices of the
+    pool-major operands) rather than vmapped through the kernel.
+    """
+    mode = _mode()
+    if mode == "ref":
+        return ref.corr_argmax_batched_ref(mat, w, base_t, mask_t,
+                                           absolute=absolute)
+    interpret = mode == "interpret"
+    base = base_t.T
+    mask = mask_t.T
+    if mat.ndim == 2:
+        return jax.lax.map(
+            lambda args: corr_kernel.corr_argmax(
+                mat, *args, absolute=absolute, interpret=interpret),
+            (w, base, mask))
+    return jax.lax.map(
+        lambda args: corr_kernel.corr_argmax(
+            *args, absolute=absolute, interpret=interpret),
+        (mat, w, base, mask))
+
+
 def fl_gain_argmax(sim: jax.Array, cover: jax.Array, mask: jax.Array
                    ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Facility-location gain scan + masked argmax (resident similarity).

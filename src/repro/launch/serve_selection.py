@@ -1,0 +1,128 @@
+"""Selection-service driver: queued multi-tenant selection over shared pools.
+
+The selection twin of ``launch/serve.py`` (decode serving): a
+``SelectionService`` is stood up, synthetic proxy pools are registered,
+a queue of ``SelectRequest``s from several tenants is admitted and
+drained — same-pool requests micro-batch into one batched OMP solve —
+and one client runs an anytime budget extension ``k -> k'``.
+
+``--smoke`` (the CI parity-gate configuration) self-checks the two
+correctness claims the service makes and exits non-zero on violation:
+
+* every batched result is index-identical to a direct per-request
+  ``omp_select`` over the same pool/target;
+* the ``k -> k'`` session continuation is index-identical to a one-shot
+  ``k'`` solve.
+
+Run:  PYTHONPATH=src python -m repro.launch.serve_selection --smoke
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.omp import omp_select
+from repro.serve import SelectionService
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small pools + differential self-checks (CI gate)")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--pools", type=int, default=2)
+    ap.add_argument("--pool-size", type=int, default=4096)
+    ap.add_argument("--dim", type=int, default=64)
+    ap.add_argument("--k", type=int, default=128)
+    ap.add_argument("--k-extend", type=int, default=192,
+                    help="anytime extension budget (> --k)")
+    ap.add_argument("--tenants", type=int, default=2)
+    ap.add_argument("--max-batch", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    if args.smoke:
+        args.pool_size = min(args.pool_size, 1024)
+        args.k = min(args.k, 64)
+        args.k_extend = min(args.k_extend, 96)
+
+    svc = SelectionService(max_batch=args.max_batch,
+                          max_queue=max(args.requests * 2, 16))
+    rng = np.random.default_rng(args.seed)
+    pools = []
+    for p in range(args.pools):
+        g = rng.standard_normal(
+            (args.pool_size, args.dim)).astype(np.float32)
+        pools.append((svc.register_pool(g), g))
+
+    # Queue: round-robin tenants over round-robin pools, then one drain —
+    # requests sharing a pool land in the same micro-batch.
+    t0 = time.perf_counter()
+    tickets = []
+    for i in range(args.requests):
+        pid, _ = pools[i % len(pools)]
+        tickets.append(svc.submit(pid, k=args.k,
+                                  tenant=f"tenant-{i % args.tenants}"))
+    done = svc.drain()
+    serve_wall = time.perf_counter() - t0
+
+    failures = []
+    if any(t.status != "done" for t in done):
+        failures.append("request-failed")
+    batch_sizes = sorted({t.batched_with for t in done})
+
+    batched_ok = True
+    if args.smoke:
+        for t in done:
+            g = dict(pools)[t.request.pool_id]
+            gj = jnp.asarray(g)
+            idx, _, mask, _ = omp_select(gj, jnp.sum(gj, axis=0), k=args.k)
+            same = (np.array_equal(np.asarray(t.result.indices),
+                                   np.asarray(idx))
+                    and np.array_equal(np.asarray(t.result.mask),
+                                       np.asarray(mask)))
+            batched_ok &= same
+        if not batched_ok:
+            failures.append("batched-vs-sequential")
+
+    # Anytime budget extension on pool 0: k -> k'.
+    pid0, g0 = pools[0]
+    t0 = time.perf_counter()
+    sid, _ = svc.open_session(pid0, k=args.k, tenant="tenant-0")
+    ext = svc.extend_session(sid, args.k_extend)
+    extend_wall = time.perf_counter() - t0
+    g0j = jnp.asarray(g0)
+    one_idx, _, one_mask, _ = omp_select(g0j, jnp.sum(g0j, axis=0),
+                                         k=args.k_extend)
+    extension_ok = (np.array_equal(np.asarray(ext.indices),
+                                   np.asarray(one_idx))
+                    and np.array_equal(np.asarray(ext.mask),
+                                       np.asarray(one_mask)))
+    if not extension_ok:
+        failures.append("extension-vs-oneshot")
+
+    stats = svc.stats()
+    report = {
+        "requests": len(done),
+        "pools": args.pools,
+        "k": args.k,
+        "k_extend": args.k_extend,
+        "batch_sizes": batch_sizes,
+        "batches_run": stats["scheduler"]["batches_run"],
+        "serve_wall_s": round(serve_wall, 3),
+        "extend_wall_s": round(extend_wall, 3),
+        "batched_ok": batched_ok,
+        "extension_ok": extension_ok,
+        "failures": failures,
+        "ok": not failures,
+    }
+    print(report)
+    return report
+
+
+if __name__ == "__main__":
+    raise SystemExit(0 if main()["ok"] else 1)

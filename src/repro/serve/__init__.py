@@ -1,0 +1,22 @@
+"""Selection-as-a-service (DESIGN.md §6).
+
+Multi-tenant batched selection over registered pools: a pool registry
+with per-pool precompute, a micro-batching request scheduler over the
+vmapped/batched multi-target OMP, anytime-budget sessions (k -> k'
+extension as a certified resume), and tenant admission/backpressure.
+"""
+
+from repro.serve.admission import (AdmissionController, AdmissionError,
+                                   BudgetExhausted, QueueFull,
+                                   estimate_cost)
+from repro.serve.registry import PoolEntry, PoolRegistry, UnknownPool
+from repro.serve.scheduler import RequestScheduler, SelectRequest, Ticket
+from repro.serve.service import SelectionService
+from repro.serve.sessions import Session, SessionGone, SessionStore
+
+__all__ = [
+    "AdmissionController", "AdmissionError", "BudgetExhausted", "QueueFull",
+    "estimate_cost", "PoolEntry", "PoolRegistry", "UnknownPool",
+    "RequestScheduler", "SelectRequest", "Ticket", "SelectionService",
+    "Session", "SessionGone", "SessionStore",
+]

@@ -1,0 +1,134 @@
+"""Admission control: bounded queues and per-tenant budget accounting.
+
+A shared selection service dies one of two deaths without backpressure: an
+unbounded queue (every caller sees unbounded latency) or one hot tenant
+starving the rest.  Admission is therefore checked at ``submit`` time, and
+rejections are *errors the client sees immediately* — never silent drops:
+
+* ``QueueFull`` — the global queue is at ``max_queue``; retry after a
+  drain.  This is the load-shedding backstop, tenant-blind by design.
+* ``BudgetExhausted`` — the tenant has spent its cost budget or has too
+  many requests in flight.  Budgets are charged in abstract *work units*
+  estimated from the request shape (``estimate_cost``), debited at
+  admission (optimistic — the scheduler refunds nothing for batched
+  amortization, so the budget is a worst-case sequential bound and
+  batching is pure headroom for the operator).  Work that *fails* is
+  refunded via ``complete(refund=...)``: a metered tenant never pays for
+  selections that were not delivered.
+
+``TenantAccount.budget_units=None`` means unmetered (the default tenant) —
+in-flight caps still apply, so even unmetered tenants cannot occupy the
+whole queue.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+
+class AdmissionError(RuntimeError):
+    """Base class: request rejected at admission (client should back off)."""
+
+
+class QueueFull(AdmissionError):
+    pass
+
+
+class BudgetExhausted(AdmissionError):
+    pass
+
+
+def estimate_cost(n: int, d: int, k: int) -> float:
+    """Work units for one selection: the pool scan + per-round solve term.
+
+    ``n·d`` (one scoring pass over the pool) + ``k·(n + d)`` (per-round
+    argmax + cache growth) — the incremental solver's leading terms.  Units
+    are arbitrary but consistent, which is all budget *ratios* need.
+    """
+    return float(n) * d + float(k) * (n + d)
+
+
+@dataclass
+class TenantAccount:
+    tenant: str
+    budget_units: Optional[float] = None   # None = unmetered
+    max_inflight: int = 16
+    used_units: float = 0.0
+    inflight: int = 0
+    admitted: int = 0
+    rejected: int = 0
+
+    @property
+    def remaining_units(self) -> Optional[float]:
+        if self.budget_units is None:
+            return None
+        return max(self.budget_units - self.used_units, 0.0)
+
+
+class AdmissionController:
+    def __init__(self, max_queue: int = 64,
+                 default_budget_units: Optional[float] = None,
+                 max_inflight_per_tenant: int = 16):
+        self.max_queue = int(max_queue)
+        self.default_budget_units = default_budget_units
+        self.max_inflight_per_tenant = int(max_inflight_per_tenant)
+        self._accounts: dict[str, TenantAccount] = {}
+
+    def account(self, tenant: str) -> TenantAccount:
+        acct = self._accounts.get(tenant)
+        if acct is None:
+            acct = TenantAccount(
+                tenant=tenant, budget_units=self.default_budget_units,
+                max_inflight=self.max_inflight_per_tenant)
+            self._accounts[tenant] = acct
+        return acct
+
+    def set_budget(self, tenant: str, budget_units: Optional[float],
+                   max_inflight: Optional[int] = None) -> TenantAccount:
+        acct = self.account(tenant)
+        acct.budget_units = budget_units
+        if max_inflight is not None:
+            acct.max_inflight = int(max_inflight)
+        return acct
+
+    def admit(self, tenant: str, cost: float, queue_depth: int) -> float:
+        """Charge ``cost`` units to ``tenant`` or raise; returns the cost."""
+        acct = self.account(tenant)
+        if queue_depth >= self.max_queue:
+            acct.rejected += 1
+            raise QueueFull(
+                f"queue at capacity ({queue_depth}/{self.max_queue}); "
+                "drain before submitting more")
+        if acct.inflight >= acct.max_inflight:
+            acct.rejected += 1
+            raise BudgetExhausted(
+                f"tenant {tenant!r} has {acct.inflight} requests in flight "
+                f"(max {acct.max_inflight})")
+        if (acct.budget_units is not None
+                and acct.used_units + cost > acct.budget_units):
+            acct.rejected += 1
+            raise BudgetExhausted(
+                f"tenant {tenant!r} budget exhausted: {acct.used_units:.3g}"
+                f" + {cost:.3g} > {acct.budget_units:.3g} units")
+        acct.used_units += cost
+        acct.inflight += 1
+        acct.admitted += 1
+        return cost
+
+    def complete(self, tenant: str, refund: float = 0.0) -> None:
+        """Release an in-flight slot; ``refund`` credits back admission
+        units for work that failed (a metered tenant must not pay for
+        selections that were never delivered — successful batched work is
+        still charged its full sequential estimate, that amortization
+        stays operator headroom)."""
+        acct = self.account(tenant)
+        acct.inflight = max(acct.inflight - 1, 0)
+        if refund:
+            acct.used_units = max(acct.used_units - refund, 0.0)
+
+    def stats(self) -> dict:
+        return {t: {"used_units": a.used_units, "inflight": a.inflight,
+                    "admitted": a.admitted, "rejected": a.rejected,
+                    "remaining_units": a.remaining_units}
+                for t, a in self._accounts.items()}

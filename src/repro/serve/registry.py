@@ -1,0 +1,219 @@
+"""Pool registry: admit a candidate pool once, serve many requests off it.
+
+The selection service (DESIGN.md §6) is multi-tenant over *shared* pools —
+the whole point of batched serving is that B concurrent requests against
+the same pool share one solve.  The registry is where "the same pool" is
+established and where everything derivable from the pool alone (no target,
+no budget) is computed once and cached:
+
+* a content **fingerprint** (shape/dtype + sampled row bytes, folded with
+  the validity mask — the same rows under a different mask are a
+  different pool), so a client re-registering identical data gets the
+  existing ``pool_id`` back instead of a duplicate device copy;
+* the default GRAD-MATCH **target** ``sum_i g_i`` (eq. 2 of the paper);
+* lazily, the CRAIG **FL similarity** — resident ``(n, n)`` tiles below
+  the greedy engine's on-the-fly threshold, otherwise just the ``l_max``
+  offset for the tiled scan — shared by every CRAIG request against the
+  pool instead of rebuilt per call.
+
+Pools come in two kinds: ``"array"`` (an in-memory ``(n, d)`` proxy
+matrix, device-resident, batchable) and ``"chunked"`` (a
+``data.loader.ChunkedPool`` or compatible chunk factory — served through
+the streaming block-OMP, one request at a time; its default target costs
+one summing pass and is likewise cached).
+
+Eviction is LRU over registered pools (``max_pools``): evicting drops the
+device arrays and cached precompute but not client state — sessions pin
+their own derived buffers (see ``serve/sessions.py``).
+"""
+
+from __future__ import annotations
+
+import hashlib
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import greedy as greedy_lib
+from repro.core import streaming as stream_lib
+
+
+class UnknownPool(KeyError):
+    """Raised for a ``pool_id`` that was never registered or was evicted."""
+
+
+def _fingerprint_array(x: np.ndarray, sample_rows: int = 64) -> str:
+    """Content hash over shape/dtype + up to ``sample_rows`` strided rows.
+
+    Sampling keeps admission O(sample·d) for huge pools; strided rows (not
+    just a head slice) catch the common "same head, different tail" case.
+    Collisions only cost a spurious dedupe of byte-identical samples —
+    acceptable for a cache key, and ``register(pool_id=...)`` overrides.
+    """
+    h = hashlib.sha1()
+    h.update(repr((x.shape, str(x.dtype))).encode())
+    n = x.shape[0]
+    step = max(n // sample_rows, 1)
+    sample = np.ascontiguousarray(x[::step][:sample_rows])
+    h.update(sample.tobytes())
+    return h.hexdigest()[:16]
+
+
+def _fold_valid(fp: str, valid) -> str:
+    """Fold the validity mask into a content fingerprint — the same rows
+    under a different mask are a different pool (deduping across masks
+    would silently hand one caller another caller's exclusions)."""
+    if valid is None:
+        return fp
+    v = np.asarray(valid, bool)
+    return hashlib.sha1(
+        (fp + "+valid").encode() + v.tobytes()).hexdigest()[:16]
+
+
+@dataclass
+class PoolEntry:
+    pool_id: str
+    kind: str                      # "array" | "chunked"
+    n: int
+    d: int
+    fingerprint: str
+    grads: Optional[jnp.ndarray] = None          # array pools, (n, d) f32
+    chunk_iter: Optional[Callable] = None        # chunked pools: factory
+    valid: Optional[jnp.ndarray] = None          # (n,) bool or None
+    target_sum: Optional[jnp.ndarray] = None     # (d,) default target
+    # CRAIG scan cache, resolved lazily on the first craig request:
+    _fl: Optional[tuple] = field(default=None, repr=False)
+
+    @property
+    def batchable(self) -> bool:
+        return self.kind == "array"
+
+    def fl_scan(self, method: str = "lazy"):
+        """(sim | None, l_max, on_the_fly) for the greedy engine — resolved
+        once per pool and reused by every CRAIG request against it."""
+        if self.kind != "array":
+            raise UnknownPool(
+                f"pool {self.pool_id!r} is chunked: CRAIG requests need a "
+                "resident pool")
+        if self._fl is None:
+            self._fl = greedy_lib.resolve_fl_scan(self.grads, None, method)
+        return self._fl
+
+
+class PoolRegistry:
+    """Admit pools once; hand out cached entries by ``pool_id``."""
+
+    def __init__(self, max_pools: int = 8):
+        self.max_pools = int(max_pools)
+        self._pools: OrderedDict[str, PoolEntry] = OrderedDict()
+        self._by_fp: dict[str, str] = {}
+        self.evictions = 0
+
+    # -- admission -----------------------------------------------------------
+    def register(self, pool, pool_id: Optional[str] = None,
+                 valid=None) -> str:
+        """Admit an in-memory ``(n, d)`` proxy pool; returns its id.
+
+        Re-registering content with a known fingerprint returns the
+        existing id (no second device copy) unless an explicit distinct
+        ``pool_id`` is given.
+        """
+        x = np.asarray(pool, np.float32)
+        if x.ndim != 2 or x.shape[0] == 0:
+            raise ValueError(f"pool must be (n, d), got {x.shape}")
+        fp = _fold_valid(_fingerprint_array(x), valid)
+        known = self._by_fp.get(fp)
+        if known is not None and known in self._pools and pool_id is None:
+            self._pools.move_to_end(known)
+            return known
+        pid = pool_id or f"pool-{fp}"
+        g = jnp.asarray(x)
+        v = None if valid is None else jnp.asarray(valid, bool)
+        gv = g if v is None else g * v[:, None].astype(g.dtype)
+        entry = PoolEntry(
+            pool_id=pid, kind="array", n=x.shape[0], d=x.shape[1],
+            fingerprint=fp, grads=g, valid=v,
+            target_sum=jnp.sum(gv, axis=0),
+        )
+        self._admit(pid, fp, entry)
+        return pid
+
+    def register_chunked(self, pool, pool_id: Optional[str] = None,
+                         valid=None) -> str:
+        """Admit a ``ChunkedPool`` (or any ``(chunk, valid)`` factory).
+
+        The default target is computed with one summing pass now —
+        admission is the one place that pass is paid; every later request
+        reuses it.
+        """
+        if callable(pool):
+            if valid is not None:
+                raise ValueError(
+                    "valid= is only supported for ChunkedPool admission; "
+                    "bake the mask into a custom chunk factory's (chunk, "
+                    "valid) pairs instead")
+            chunk_iter = pool
+        else:
+            chunk_iter = stream_lib.chunked_pool_iter(pool, valid=valid)
+        target, n = stream_lib.streaming_target(chunk_iter)
+        first_chunk, _ = next(iter(chunk_iter()))
+        fp_src = np.asarray(first_chunk, np.float32)
+        fp = hashlib.sha1(
+            repr((n, fp_src.shape)).encode()
+            + _fingerprint_array(fp_src).encode()).hexdigest()[:16]
+        fp = _fold_valid(fp, valid)
+        known = self._by_fp.get(fp)
+        if known is not None and known in self._pools and pool_id is None:
+            self._pools.move_to_end(known)
+            return known
+        pid = pool_id or f"chunked-{fp}"
+        entry = PoolEntry(pool_id=pid, kind="chunked", n=int(n),
+                          d=int(target.shape[0]), fingerprint=fp,
+                          chunk_iter=chunk_iter, target_sum=target)
+        self._admit(pid, fp, entry)
+        return pid
+
+    def _admit(self, pid: str, fp: str, entry: PoolEntry) -> None:
+        # Re-registering an explicit pool_id with different content must
+        # also retire the replaced content's fingerprint — otherwise a
+        # later no-id registration of the *old* content would dedupe onto
+        # an entry that now holds different data.
+        old = self._pools.get(pid)
+        if old is not None and old.fingerprint != fp:
+            if self._by_fp.get(old.fingerprint) == pid:
+                del self._by_fp[old.fingerprint]
+        self._pools[pid] = entry
+        self._pools.move_to_end(pid)
+        self._by_fp[fp] = pid
+        while len(self._pools) > self.max_pools:
+            old_id, old = self._pools.popitem(last=False)
+            self._by_fp.pop(old.fingerprint, None)
+            self.evictions += 1
+
+    # -- lookup --------------------------------------------------------------
+    def get(self, pool_id: str) -> PoolEntry:
+        entry = self._pools.get(pool_id)
+        if entry is None:
+            raise UnknownPool(
+                f"unknown pool {pool_id!r} (evicted or never registered); "
+                f"known: {list(self._pools)}")
+        self._pools.move_to_end(pool_id)
+        return entry
+
+    def __contains__(self, pool_id: str) -> bool:
+        return pool_id in self._pools
+
+    def __len__(self) -> int:
+        return len(self._pools)
+
+    def stats(self) -> dict:
+        return {
+            "pools": len(self._pools),
+            "evictions": self.evictions,
+            "resident_bytes": sum(
+                e.n * e.d * 4 for e in self._pools.values()
+                if e.kind == "array"),
+        }

@@ -1,0 +1,270 @@
+"""Request scheduler: queue `SelectRequest`s, micro-batch same-pool solves.
+
+The serving shape this implements (DESIGN.md §6): clients ``submit()``
+and get a ticket back immediately (admission control runs here — see
+``serve/admission.py``); ``drain()`` executes the queue.  Execution groups
+queued requests by **batch key** ``(pool_id, strategy, k, lam, eps,
+positive)`` — requests that are the *same solve over the same pool up to
+their target/validity vectors* — and runs each group as one
+``omp_select_batched`` call: one column-cache/Gram growth schedule and one
+pool scan per round serve the whole group, so B queued requests cost one
+batched solve instead of B sequential ones (benchmarks/bench_selection.py
+``run_serve`` records the throughput ratio; acceptance ≥ 5x at B = 32).
+
+Batch sizes are padded up to a power-of-two bucket (extra rows re-solve
+request 0 and are dropped) so the jit cache holds O(log max_batch)
+programs instead of one per observed batch size.
+
+Non-batchable work degrades gracefully to per-request execution: CRAIG
+tiers reuse the registry's cached FL scan, chunked pools run the
+streaming block-OMP, everything else goes through the ordinary
+``selection.select`` dispatch.  Results are per-ticket ``SelectionResult``
+(weights re-normalized per request, exactly as the library path returns).
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import craig as craig_lib
+from repro.core import glister as glister_lib
+from repro.core import random_sel
+from repro.core import streaming as stream_lib
+from repro.core.gradmatch import SelectionResult, _normalize
+from repro.core.omp import omp_select_batched
+from repro.serve.admission import AdmissionController, estimate_cost
+from repro.serve.registry import PoolEntry, PoolRegistry, UnknownPool
+
+SERVABLE = ("gradmatch", "craig", "craig-lazy", "craig-stochastic",
+            "glister", "random")
+
+_CRAIG_METHODS = {"craig": "dense", "craig-lazy": "lazy",
+                  "craig-stochastic": "stochastic"}
+
+
+@dataclass(frozen=True)
+class SelectRequest:
+    """One selection ask.  ``target=None`` means the pool's cached default
+    (the eq.-2 sum); a per-request ``valid`` intersects the pool's own."""
+
+    pool_id: str
+    k: int
+    strategy: str = "gradmatch"
+    lam: float = 0.5
+    eps: float = 1e-10
+    positive: bool = True
+    target: Optional[object] = None     # (d,) array-like
+    valid: Optional[object] = None      # (n,) bool array-like
+    tenant: str = "default"
+    seed: int = 0                       # random / craig-stochastic
+
+    def batch_key(self):
+        return (self.pool_id, self.strategy, self.k, float(self.lam),
+                float(self.eps), self.positive)
+
+
+@dataclass
+class Ticket:
+    ticket_id: str
+    request: SelectRequest
+    cost: float
+    status: str = "queued"              # queued | done | failed
+    result: Optional[SelectionResult] = None
+    error: Optional[str] = None
+    batched_with: int = 0               # group size the solve ran at
+
+
+def _bucket_b(b: int) -> int:
+    p = 1
+    while p < b:
+        p *= 2
+    return p
+
+
+class RequestScheduler:
+    def __init__(self, registry: PoolRegistry,
+                 admission: Optional[AdmissionController] = None,
+                 max_batch: int = 32,
+                 stream_buffer: int = 256):
+        self.registry = registry
+        self.admission = admission or AdmissionController()
+        self.max_batch = int(max_batch)
+        self.stream_buffer = int(stream_buffer)
+        self._queue: list[Ticket] = []
+        self._ids = itertools.count()
+        self.batches_run = 0
+        self.singles_run = 0
+
+    # -- intake --------------------------------------------------------------
+    def submit(self, req: SelectRequest) -> Ticket:
+        if req.strategy not in SERVABLE:
+            raise ValueError(
+                f"unservable strategy {req.strategy!r}; servable: "
+                f"{SERVABLE}")
+        if req.k <= 0:
+            raise ValueError(f"k must be positive, got {req.k}")
+        entry = self.registry.get(req.pool_id)   # raises UnknownPool
+        cost = estimate_cost(entry.n, entry.d, req.k)
+        self.admission.admit(req.tenant, cost, len(self._queue))
+        ticket = Ticket(ticket_id=f"req-{next(self._ids)}", request=req,
+                        cost=cost)
+        self._queue.append(ticket)
+        return ticket
+
+    def pending(self) -> int:
+        return len(self._queue)
+
+    # -- execution -----------------------------------------------------------
+    def drain(self) -> list[Ticket]:
+        """Run the whole queue; returns the tickets in completion order.
+
+        A failing request fails its ticket(s), never the queue: tenants
+        get their in-flight slot back either way, and failed work refunds
+        its admission charge (a metered tenant must not pay for
+        selections that were never delivered).
+        """
+        done: list[Ticket] = []
+        while self._queue:
+            head = self._queue[0]
+            try:
+                entry = self.registry.get(head.request.pool_id)
+            except UnknownPool as exc:
+                # Pool evicted between submit and drain: fail every ticket
+                # queued against it (same fate at their own head position).
+                group = self._take_group_by_pool(head.request.pool_id)
+                for t in group:
+                    t.status = "failed"
+                    t.error = f"{type(exc).__name__}: {exc}"
+            else:
+                if head.request.strategy == "gradmatch" and entry.batchable:
+                    group = self._take_group(head.request.batch_key())
+                    self._run_gradmatch_batch(entry, group)
+                else:
+                    group = [self._queue.pop(0)]
+                    self._run_single(entry, group[0])
+            for t in group:
+                self.admission.complete(
+                    t.request.tenant,
+                    refund=t.cost if t.status == "failed" else 0.0)
+            done.extend(group)
+        return done
+
+    def _take_group_by_pool(self, pool_id: str) -> list[Ticket]:
+        group = [t for t in self._queue if t.request.pool_id == pool_id]
+        taken = set(id(t) for t in group)
+        self._queue = [t for t in self._queue if id(t) not in taken]
+        return group
+
+    def _take_group(self, key) -> list[Ticket]:
+        group = [t for t in self._queue
+                 if t.request.batch_key() == key][: self.max_batch]
+        taken = set(id(t) for t in group)
+        self._queue = [t for t in self._queue if id(t) not in taken]
+        return group
+
+    def _run_gradmatch_batch(self, entry: PoolEntry,
+                             group: list[Ticket]) -> None:
+        req0 = group[0].request
+        b = len(group)
+        try:
+            # Operand assembly inside the guard too: a malformed
+            # per-request target/valid (submit() does not shape-check
+            # them) must fail the group, not escape drain().
+            targets = jnp.stack([
+                entry.target_sum if t.request.target is None
+                else jnp.asarray(t.request.target, jnp.float32)
+                for t in group])
+            base_valid = (entry.valid if entry.valid is not None
+                          else jnp.ones((entry.n,), bool))
+            valids = jnp.stack([
+                base_valid if t.request.valid is None
+                else base_valid & jnp.asarray(t.request.valid, bool)
+                for t in group])
+            # Pad to the power-of-two bucket so the jit cache stays
+            # bounded; pad rows re-solve request 0 and are dropped below.
+            bb = min(_bucket_b(b), self.max_batch)
+            if bb > b:
+                pad = bb - b
+                targets = jnp.concatenate(
+                    [targets, jnp.broadcast_to(targets[0], (pad,) +
+                                               targets.shape[1:])])
+                valids = jnp.concatenate(
+                    [valids, jnp.broadcast_to(valids[0], (pad,) +
+                                              valids.shape[1:])])
+            idx, w, mask, err = omp_select_batched(
+                entry.grads, targets, k=req0.k, lam=req0.lam, eps=req0.eps,
+                positive=req0.positive, valid=valids)
+        except Exception as exc:          # fail the group, not the queue
+            for t in group:
+                t.status = "failed"
+                t.error = f"{type(exc).__name__}: {exc}"
+            return
+        for i, t in enumerate(group):
+            t.result = SelectionResult(idx[i], _normalize(w[i], mask[i]),
+                                       mask[i], err[i])
+            t.status = "done"
+            t.batched_with = b
+        self.batches_run += 1
+
+    def _run_single(self, entry: PoolEntry, ticket: Ticket) -> None:
+        req = ticket.request
+        try:
+            ticket.result = self._execute_single(entry, req)
+            ticket.status = "done"
+            ticket.batched_with = 1
+        except Exception as exc:          # surface, don't wedge the queue
+            ticket.status = "failed"
+            ticket.error = f"{type(exc).__name__}: {exc}"
+        self.singles_run += 1
+
+    def _execute_single(self, entry: PoolEntry,
+                        req: SelectRequest) -> SelectionResult:
+        if req.strategy == "random":
+            valid = entry.valid
+            if req.valid is not None:
+                v = jnp.asarray(req.valid, bool)
+                valid = v if valid is None else (valid & v)
+            return random_sel.random_select(
+                jax.random.PRNGKey(req.seed), entry.n, req.k, valid=valid)
+        if req.strategy == "gradmatch" and entry.kind == "chunked":
+            if req.valid is not None:
+                # The chunk factory was frozen at registration; silently
+                # selecting masked rows would be worse than refusing.
+                raise ValueError(
+                    "per-request valid masks are not supported on chunked "
+                    "pools — register the pool with the mask instead")
+            target = (entry.target_sum if req.target is None
+                      else jnp.asarray(req.target, jnp.float32))
+            return stream_lib.gradmatch_streaming(
+                entry.chunk_iter, req.k, target=target, lam=req.lam,
+                eps=req.eps, buffer_size=self.stream_buffer)
+        if entry.kind != "array":
+            raise ValueError(
+                f"strategy {req.strategy!r} needs a resident pool")
+        valid = entry.valid
+        if req.valid is not None:
+            v = jnp.asarray(req.valid, bool)
+            valid = v if valid is None else (valid & v)
+        if req.strategy in _CRAIG_METHODS:
+            sim, lm, otf = entry.fl_scan(_CRAIG_METHODS[req.strategy])
+            return craig_lib.craig(
+                entry.grads, req.k, sim=sim, valid=valid,
+                method=_CRAIG_METHODS[req.strategy], l_max=lm,
+                on_the_fly=otf, key=jax.random.PRNGKey(req.seed))
+        if req.strategy == "glister":
+            target = (entry.target_sum if req.target is None
+                      else jnp.asarray(req.target, jnp.float32))
+            return glister_lib.glister(entry.grads, target, req.k,
+                                       valid=valid)
+        raise ValueError(f"unservable strategy {req.strategy!r}")
+
+    def stats(self) -> dict:
+        return {"pending": len(self._queue),
+                "batches_run": self.batches_run,
+                "singles_run": self.singles_run}

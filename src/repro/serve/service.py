@@ -1,0 +1,178 @@
+"""`SelectionService`: the one object a serving deployment instantiates.
+
+Ties the subsystem together (DESIGN.md §6): the **pool registry**
+(admit/fingerprint/precompute), the **admission controller** (tenant
+budgets + queue backpressure), the **request scheduler** (micro-batched
+solves) and the **session store** (anytime budgets).  The driver
+(``launch/serve_selection.py``) and the example are thin shells over this.
+
+Typical flow::
+
+    svc = SelectionService(max_batch=32)
+    pid = svc.register_pool(proxies)                  # once per pool
+    t1 = svc.submit(pid, k=256, tenant="team-a")      # queued
+    t2 = svc.submit(pid, k=256, tenant="team-b")      # same batch key
+    svc.drain()                                       # one batched solve
+    subset = t1.result                                # SelectionResult
+
+    sid, res = svc.open_session(pid, k=256)           # anytime budget
+    res2 = svc.extend_session(sid, 512)               # resume, not re-solve
+
+Sessions charge admission for the *delta* rounds only — that is the whole
+economic point of checkpointing the solver state.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core.gradmatch import SelectionResult, _normalize
+from repro.core.omp import (omp_session_extend, omp_session_start,
+                            session_result)
+from repro.serve.admission import AdmissionController, estimate_cost
+from repro.serve.registry import PoolRegistry, UnknownPool
+from repro.serve.scheduler import RequestScheduler, SelectRequest, Ticket
+from repro.serve.sessions import SessionGone, SessionStore
+
+
+class SelectionService:
+    def __init__(
+        self,
+        max_batch: int = 32,
+        max_queue: int = 64,
+        max_pools: int = 8,
+        max_sessions: int = 32,
+        session_ttl_s: float = 600.0,
+        default_budget_units: Optional[float] = None,
+        max_inflight_per_tenant: int = 16,
+        clock=None,
+    ):
+        self.registry = PoolRegistry(max_pools=max_pools)
+        self.admission = AdmissionController(
+            max_queue=max_queue,
+            default_budget_units=default_budget_units,
+            max_inflight_per_tenant=max_inflight_per_tenant)
+        self.scheduler = RequestScheduler(self.registry, self.admission,
+                                          max_batch=max_batch)
+        kwargs = {} if clock is None else {"clock": clock}
+        self.sessions = SessionStore(max_sessions=max_sessions,
+                                     ttl_s=session_ttl_s, **kwargs)
+
+    # -- pools ---------------------------------------------------------------
+    def register_pool(self, pool, pool_id: Optional[str] = None,
+                      valid=None) -> str:
+        return self.registry.register(pool, pool_id=pool_id, valid=valid)
+
+    def register_chunked_pool(self, pool, pool_id: Optional[str] = None,
+                              valid=None) -> str:
+        return self.registry.register_chunked(pool, pool_id=pool_id,
+                                              valid=valid)
+
+    # -- one-shot requests ---------------------------------------------------
+    def submit(self, pool_id: str, k: int, strategy: str = "gradmatch",
+               tenant: str = "default", **kw) -> Ticket:
+        return self.scheduler.submit(SelectRequest(
+            pool_id=pool_id, k=k, strategy=strategy, tenant=tenant, **kw))
+
+    def drain(self) -> list[Ticket]:
+        return self.scheduler.drain()
+
+    def select(self, pool_id: str, k: int, **kw) -> SelectionResult:
+        """Blocking convenience: submit + drain + unwrap one request.
+
+        Note this drains the *whole* queue — batching still happens if
+        other requests are already waiting.
+        """
+        ticket = self.submit(pool_id, k, **kw)
+        self.drain()
+        if ticket.status != "done":
+            raise RuntimeError(f"request failed: {ticket.error}")
+        return ticket.result
+
+    # -- anytime sessions ----------------------------------------------------
+    def open_session(self, pool_id: str, k: int, lam: float = 0.5,
+                     eps: float = 1e-10, positive: bool = True,
+                     target=None, valid=None, tenant: str = "default"
+                     ) -> tuple[str, SelectionResult]:
+        """Solve ``k`` rounds and keep the solver state for extension."""
+        entry = self.registry.get(pool_id)
+        if not entry.batchable:
+            raise UnknownPool(
+                f"pool {pool_id!r} is chunked: anytime sessions need a "
+                "resident pool")
+        cost = estimate_cost(entry.n, entry.d, k)
+        self.admission.admit(tenant, cost, self.scheduler.pending())
+        try:
+            tgt = (entry.target_sum if target is None
+                   else jnp.asarray(target, jnp.float32))
+            v = entry.valid
+            if valid is not None:
+                vv = jnp.asarray(valid, bool)
+                v = vv if v is None else (v & vv)
+            state = omp_session_start(entry.grads, tgt, k, lam=lam, eps=eps,
+                                      positive=positive, valid=v)
+        except Exception:
+            self.admission.complete(tenant, refund=cost)
+            raise
+        self.admission.complete(tenant)
+        sess = self.sessions.put(pool_id, tenant, state,
+                                 pool_fingerprint=entry.fingerprint)
+        return sess.session_id, self._session_selection(state)
+
+    def extend_session(self, session_id: str, k_new: int
+                       ) -> SelectionResult:
+        """Extend a session's budget ``k -> k_new``; only the delta runs.
+
+        The continuation is certified index-identical to a one-shot
+        ``k_new`` solve (tests/test_serve.py, parity gate) — the client
+        gets exactly what re-submitting at ``k_new`` would return, minus
+        the recompute.
+        """
+        sess = self.sessions.get(session_id)          # raises SessionGone
+        entry = self.registry.get(sess.pool_id)
+        if entry.fingerprint != sess.pool_fingerprint:
+            # The pool id was re-registered with different content: the
+            # cached c0/Gram/colcache no longer describe these gradients.
+            self.sessions.close(session_id)
+            raise SessionGone(
+                f"session {session_id!r} is stale: pool {sess.pool_id!r} "
+                "content changed since the session opened — re-open")
+        if k_new < sess.state.k:
+            raise ValueError(
+                f"cannot shrink an anytime session: have k={sess.state.k},"
+                f" asked k'={k_new} (slice the previous result instead)")
+        if k_new == sess.state.k:                     # idempotent retry:
+            self.sessions.get(session_id)             # touch, charge 0
+            return self._session_selection(sess.state)
+        delta = k_new - sess.state.k
+        cost = estimate_cost(entry.n, entry.d, delta)
+        self.admission.admit(sess.tenant, cost, self.scheduler.pending())
+        try:
+            state = omp_session_extend(entry.grads, sess.state, k_new)
+        except Exception:
+            self.admission.complete(sess.tenant, refund=cost)
+            raise
+        self.admission.complete(sess.tenant)
+        self.sessions.update(session_id, state)
+        return self._session_selection(state)
+
+    def close_session(self, session_id: str) -> bool:
+        return self.sessions.close(session_id)
+
+    @staticmethod
+    def _session_selection(state) -> SelectionResult:
+        idx, w, mask, err = session_result(state)
+        return SelectionResult(idx, _normalize(w, mask), mask, err)
+
+    # -- observability -------------------------------------------------------
+    def stats(self) -> dict:
+        return {"registry": self.registry.stats(),
+                "scheduler": self.scheduler.stats(),
+                "sessions": self.sessions.stats(),
+                "tenants": self.admission.stats()}
+
+
+__all__ = ["SelectionService", "SelectRequest", "Ticket", "SessionGone",
+           "UnknownPool"]

@@ -1,0 +1,114 @@
+"""Anytime-budget sessions: checkpointed OMP state with TTL + LRU eviction.
+
+A client that asked for ``k`` selected examples and later wants ``k'`` has,
+with a stateless server, exactly one option: a from-scratch ``k'`` solve.
+The incremental-Gram solver's blocked prefix growth makes the cheap option
+possible — the per-session ``OMPAnytimeState`` (core/omp.py) holds the
+column cache, Gram, cached rows and residual at round ``k``, so the
+extension runs only rounds ``[k, k')`` and is certified index-identical to
+the one-shot ``k'`` solve (tests/test_serve.py runs the differential grid).
+
+This module is the bookkeeping half: a bounded store of live sessions with
+
+* **TTL expiry** — a session idle past ``ttl_s`` is dropped on the next
+  sweep (state is O(k·(n_cols + d) + k²) floats; clients that walked away
+  must not pin it forever);
+* **LRU eviction** — beyond ``max_sessions`` the least-recently-used
+  session is evicted even if fresh (capacity beats fairness — an evicted
+  client degrades to a one-shot solve, it is never wrong);
+* a monotonic injectable ``clock`` so the tests drive expiry
+  deterministically.
+
+The compute half (running the extension) lives in ``serve/service.py``,
+which owns the registry the pool arrays come from.
+"""
+
+from __future__ import annotations
+
+import itertools
+import time
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+from repro.core.omp import OMPAnytimeState
+
+
+class SessionGone(KeyError):
+    """Session expired, was evicted, or never existed."""
+
+
+@dataclass
+class Session:
+    session_id: str
+    pool_id: str
+    pool_fingerprint: str    # content at open time — a pool replaced
+                             # under the same id must not serve this state
+    tenant: str
+    state: OMPAnytimeState
+    created_at: float
+    last_used: float
+    extensions: int = 0
+
+
+class SessionStore:
+    def __init__(self, max_sessions: int = 32, ttl_s: float = 600.0,
+                 clock: Callable[[], float] = time.monotonic):
+        self.max_sessions = int(max_sessions)
+        self.ttl_s = float(ttl_s)
+        self._clock = clock
+        self._sessions: OrderedDict[str, Session] = OrderedDict()
+        self._ids = itertools.count()
+        self.evictions = 0
+        self.expirations = 0
+
+    def put(self, pool_id: str, tenant: str, state: OMPAnytimeState,
+            pool_fingerprint: str = "") -> Session:
+        now = self._clock()
+        sid = f"sess-{next(self._ids)}"
+        sess = Session(session_id=sid, pool_id=pool_id,
+                       pool_fingerprint=pool_fingerprint, tenant=tenant,
+                       state=state, created_at=now, last_used=now)
+        self._sessions[sid] = sess
+        self.sweep()
+        while len(self._sessions) > self.max_sessions:
+            self._sessions.popitem(last=False)
+            self.evictions += 1
+        return sess
+
+    def get(self, session_id: str) -> Session:
+        self.sweep()
+        sess = self._sessions.get(session_id)
+        if sess is None:
+            raise SessionGone(
+                f"session {session_id!r} not found (expired after "
+                f"{self.ttl_s}s idle, LRU-evicted, or never opened)")
+        sess.last_used = self._clock()
+        self._sessions.move_to_end(session_id)
+        return sess
+
+    def update(self, session_id: str, state: OMPAnytimeState) -> None:
+        sess = self.get(session_id)
+        sess.state = state
+        sess.extensions += 1
+
+    def close(self, session_id: str) -> bool:
+        return self._sessions.pop(session_id, None) is not None
+
+    def sweep(self) -> int:
+        """Drop sessions idle past the TTL; returns how many were dropped."""
+        now = self._clock()
+        dead = [sid for sid, s in self._sessions.items()
+                if now - s.last_used > self.ttl_s]
+        for sid in dead:
+            del self._sessions[sid]
+        self.expirations += len(dead)
+        return len(dead)
+
+    def __len__(self) -> int:
+        return len(self._sessions)
+
+    def stats(self) -> dict:
+        return {"sessions": len(self._sessions),
+                "evictions": self.evictions,
+                "expirations": self.expirations}

@@ -169,7 +169,8 @@ class AdaptiveTrainer:
         if tc.strategy == "full" and tc.early_stop_frac is not None:
             # FULL-EARLYSTOP: spend the same work units as a subset run.
             epochs = max(int(round(tc.epochs * tc.early_stop_frac)), 1)
-        sched = sel_lib.SelectionSchedule(tc.hp.select_every, warm_epochs)
+        sched = sel_lib.SelectionSchedule(tc.hp.select_every, warm_epochs,
+                                          total_epochs=epochs)
 
         start_epoch = 0
         work = 0.0

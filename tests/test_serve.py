@@ -1,0 +1,523 @@
+"""Differential + behavioral tests for the selection service (DESIGN.md §6).
+
+Three layers:
+
+* **Anytime parity** — ``omp_session_start(k)`` + ``omp_session_extend(k')``
+  must select index-identically (weights to f32 tolerance) to a one-shot
+  ``omp_select(k')`` across the omp-parity grid, including duplicate rows,
+  masked pools and ``k' >= n`` tails; chained extensions must be
+  bit-identical to a single extension (the resume property).
+* **Batched parity** — ``omp_select_batched`` row ``b`` must match
+  per-target ``omp_select`` exactly on indices/mask.
+* **Service behavior** — micro-batching accounting, admission backpressure
+  (queue caps, tenant budgets), session TTL/LRU with an injected clock,
+  registry fingerprint dedupe + eviction, chunked-pool serving, and the
+  schedule-validation errors from core/selection.py.
+
+Grid k values stay below the f32 noise floor (see
+tests/test_omp_parity.py and the DESIGN.md §4 discussion) — beyond it
+every solver ranks reassociation noise and parity is undefined.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import selection as sel_lib
+from repro.core.omp import (omp_select, omp_select_batched,
+                            omp_session_extend, omp_session_start,
+                            session_result)
+from repro.data.loader import ChunkedPool
+from repro.serve import (BudgetExhausted, QueueFull, SelectionService,
+                         SessionGone, UnknownPool)
+
+
+def _pool(seed, n, d):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal((n, d)).astype(np.float32)
+
+
+def _assert_match(got, want, what, exact_weights=False):
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]),
+                                  err_msg=f"{what}: indices differ")
+    np.testing.assert_array_equal(np.asarray(got[2]), np.asarray(want[2]),
+                                  err_msg=f"{what}: masks differ")
+    tol = {} if exact_weights else dict(rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(got[1]), np.asarray(want[1]),
+                               err_msg=f"{what}: weights differ", **tol)
+
+
+# ---------------------------------------------------------------------------
+# anytime extension parity (the certified k -> k' claim)
+# ---------------------------------------------------------------------------
+
+GRID = [
+    # (seed, n, d, k_first, k_ext) — same shapes as the omp-parity grid,
+    # extensions crossing the narrow/wide regimes and block boundaries
+    (0, 96, 12, 8, 16),
+    (1, 160, 48, 10, 24),
+    (2, 200, 8, 6, 16),
+    (3, 64, 32, 24, 96),     # k' > n: the masked tail must agree too
+]
+
+
+@pytest.mark.parametrize("seed,n,d,k1,k2", GRID)
+@pytest.mark.parametrize("lam", [1e-6, 0.3])
+def test_extension_matches_oneshot(seed, n, d, k1, k2, lam):
+    g = jnp.asarray(_pool(seed, n, d))
+    target = jnp.sum(g, axis=0)
+    sess = omp_session_start(g, target, k1, lam=lam)
+    sess = omp_session_extend(g, sess, k2)
+    one = omp_select(g, target, k=k2, lam=lam)
+    _assert_match(session_result(sess), one, f"extend {k1}->{k2}")
+
+
+def test_extension_duplicate_rows():
+    g = _pool(10, 80, 12)
+    g[1::2] = g[::2]
+    g = jnp.asarray(g)
+    target = jnp.sum(g, axis=0)
+    sess = omp_session_start(g, target, 9, lam=0.2)
+    sess = omp_session_extend(g, sess, 24)
+    one = omp_select(g, target, k=24, lam=0.2)
+    _assert_match(session_result(sess), one, "extend (duplicates)")
+
+
+def test_extension_masked_pool():
+    g = jnp.asarray(_pool(12, 72, 10))
+    valid = jnp.asarray(np.arange(72) < 9)
+    target = jnp.sum(g * valid[:, None], axis=0)
+    sess = omp_session_start(g, target, 5, lam=0.2, valid=valid)
+    sess = omp_session_extend(g, sess, 32)        # k' >> #valid
+    one = omp_select(g, target, k=32, lam=0.2, valid=valid)
+    _assert_match(session_result(sess), one, "extend (masked, k'>=n_valid)")
+
+
+def test_chained_extension_bit_identical():
+    """extend(k1); extend(k2) == extend(k2) directly — the resume is a
+    resume, not a re-solve with different rounding."""
+    g = jnp.asarray(_pool(4, 150, 24))
+    target = jnp.sum(g, axis=0)
+    chained = omp_session_start(g, target, 7, lam=0.1)
+    chained = omp_session_extend(g, chained, 19)
+    chained = omp_session_extend(g, chained, 40)
+    direct = omp_session_start(g, target, 40, lam=0.1)
+    _assert_match(session_result(chained), session_result(direct),
+                  "chained vs direct", exact_weights=True)
+    np.testing.assert_array_equal(np.asarray(chained.st.gram),
+                                  np.asarray(direct.st.gram))
+
+
+def test_extension_shrink_and_noop():
+    g = jnp.asarray(_pool(5, 64, 16))
+    target = jnp.sum(g, axis=0)
+    sess = omp_session_start(g, target, 12)
+    assert omp_session_extend(g, sess, 12) is sess
+    with pytest.raises(ValueError, match="shrink"):
+        omp_session_extend(g, sess, 6)
+
+
+# ---------------------------------------------------------------------------
+# batched multi-target parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed,n,d,k", [(0, 96, 12, 16), (1, 160, 48, 24),
+                                        (3, 64, 32, 96)])
+def test_batched_matches_sequential(seed, n, d, k):
+    g = jnp.asarray(_pool(seed, n, d))
+    targets = jnp.stack([
+        jnp.sum(g, axis=0),
+        jnp.sum(g[: n // 2], axis=0),
+        g[3] * 2.0 + g[7],
+        jnp.sum(g[::3], axis=0),
+    ])
+    bi, bw, bm, be = omp_select_batched(g, targets, k=k, lam=0.3)
+    for b in range(targets.shape[0]):
+        one = omp_select(g, targets[b], k=k, lam=0.3)
+        _assert_match((bi[b], bw[b], bm[b], be[b]), one, f"batch row {b}")
+
+
+def test_batched_per_request_valid_masks():
+    g = jnp.asarray(_pool(6, 120, 20))
+    rng = np.random.default_rng(6)
+    valids = jnp.asarray(rng.random((3, 120)) < 0.5)
+    targets = jnp.stack([jnp.sum(g * valids[b][:, None], axis=0)
+                         for b in range(3)])
+    bi, bw, bm, be = omp_select_batched(g, targets, k=16, lam=0.2,
+                                        valid=valids)
+    for b in range(3):
+        one = omp_select(g, targets[b], k=16, lam=0.2, valid=valids[b])
+        _assert_match((bi[b], bw[b], bm[b], be[b]), one,
+                      f"masked batch row {b}")
+        sel = np.asarray(bi[b])[np.asarray(bm[b])]
+        assert np.asarray(valids[b])[sel].all()
+
+
+def test_batched_dense_method():
+    g = jnp.asarray(_pool(7, 80, 16))
+    targets = jnp.stack([jnp.sum(g, axis=0), g[5] * 3.0])
+    bi, _, bm, _ = omp_select_batched(g, targets, k=12, method="dense")
+    for b in range(2):
+        one = omp_select(g, targets[b], k=12, method="dense")
+        np.testing.assert_array_equal(np.asarray(bi[b]),
+                                      np.asarray(one[0]))
+
+
+# ---------------------------------------------------------------------------
+# service: scheduler batching + differential result check
+# ---------------------------------------------------------------------------
+
+def _service(**kw):
+    kw.setdefault("max_batch", 8)
+    return SelectionService(**kw)
+
+
+def test_scheduler_micro_batches_same_pool():
+    svc = _service()
+    g1, g2 = _pool(0, 192, 24), _pool(1, 160, 24)
+    p1, p2 = svc.register_pool(g1), svc.register_pool(g2)
+    tickets = [svc.submit(p1 if i % 2 == 0 else p2, k=16,
+                          tenant=f"t{i % 2}") for i in range(8)]
+    done = svc.drain()
+    assert [t.status for t in done] == ["done"] * 8
+    assert all(t.batched_with == 4 for t in done)
+    assert svc.scheduler.batches_run == 2
+    for t in tickets:
+        g = g1 if t.request.pool_id == p1 else g2
+        gj = jnp.asarray(g)
+        one = omp_select(gj, jnp.sum(gj, axis=0), k=16)
+        np.testing.assert_array_equal(np.asarray(t.result.indices),
+                                      np.asarray(one[0]))
+        s = float(np.asarray(t.result.weights)[
+            np.asarray(t.result.mask)].sum())
+        assert s == pytest.approx(1.0, rel=1e-5)
+
+
+def test_scheduler_batch_respects_distinct_keys():
+    svc = _service()
+    p = svc.register_pool(_pool(2, 128, 16))
+    a = svc.submit(p, k=12)
+    b = svc.submit(p, k=20)          # different k -> different batch
+    svc.drain()
+    assert a.batched_with == 1 and b.batched_with == 1
+    assert int(np.asarray(a.result.mask).sum()) == 12
+    assert int(np.asarray(b.result.mask).sum()) == 20
+
+
+def test_scheduler_craig_and_random_single():
+    svc = _service()
+    p = svc.register_pool(_pool(3, 96, 16))
+    t1 = svc.submit(p, k=8, strategy="craig-lazy")
+    t2 = svc.submit(p, k=8, strategy="random", seed=1)
+    svc.drain()
+    assert t1.status == "done" and t2.status == "done"
+    assert int(np.asarray(t1.result.mask).sum()) == 8
+    # cached FL scan is reused across craig requests
+    entry = svc.registry.get(p)
+    assert entry._fl is not None
+
+
+def test_unknown_strategy_and_pool():
+    svc = _service()
+    p = svc.register_pool(_pool(4, 64, 8))
+    with pytest.raises(ValueError, match="unservable"):
+        svc.submit(p, k=4, strategy="gradmatch-pb")
+    with pytest.raises(UnknownPool):
+        svc.submit("nope", k=4)
+
+
+def test_chunked_pool_served_via_streaming():
+    g = _pool(5, 200, 16)
+    svc = _service()
+    pid = svc.register_chunked_pool(ChunkedPool(g, chunk_size=48))
+    res = svc.select(pid, k=20)
+    gj = jnp.asarray(g)
+    one = omp_select(gj, jnp.sum(gj, axis=0), k=20)
+    np.testing.assert_array_equal(np.asarray(res.indices),
+                                  np.asarray(one[0]))
+    with pytest.raises(UnknownPool, match="chunked"):
+        svc.open_session(pid, k=8)
+
+
+# ---------------------------------------------------------------------------
+# admission / backpressure
+# ---------------------------------------------------------------------------
+
+def test_queue_full_backpressure():
+    svc = _service(max_queue=3)
+    p = svc.register_pool(_pool(6, 64, 8))
+    for _ in range(3):
+        svc.submit(p, k=4)
+    with pytest.raises(QueueFull):
+        svc.submit(p, k=4)
+    svc.drain()
+    svc.submit(p, k=4)               # drained queue admits again
+
+
+def test_tenant_budget_exhaustion_and_inflight_cap():
+    svc = _service(default_budget_units=None)
+    p = svc.register_pool(_pool(7, 64, 8))
+    svc.admission.set_budget("metered", budget_units=1500.0)
+    t = svc.submit(p, k=1, tenant="metered")      # 64*8 + 1*72 = 584
+    with pytest.raises(BudgetExhausted, match="budget"):
+        svc.submit(p, k=8, tenant="metered")
+    svc.drain()
+    assert t.status == "done"
+    # in-flight cap is independent of the unit budget
+    svc.admission.set_budget("capped", budget_units=None, max_inflight=2)
+    svc.submit(p, k=4, tenant="capped")
+    svc.submit(p, k=4, tenant="capped")
+    with pytest.raises(BudgetExhausted, match="in flight"):
+        svc.submit(p, k=4, tenant="capped")
+    svc.drain()
+    assert svc.admission.account("capped").inflight == 0
+
+
+def test_session_extension_charges_delta_only():
+    svc = _service()
+    p = svc.register_pool(_pool(8, 128, 16))
+    sid, _ = svc.open_session(p, k=16, tenant="m")
+    used_after_open = svc.admission.account("m").used_units
+    svc.extend_session(sid, 24)
+    delta = svc.admission.account("m").used_units - used_after_open
+    from repro.serve import estimate_cost
+    assert delta == pytest.approx(estimate_cost(128, 16, 8))
+
+
+# ---------------------------------------------------------------------------
+# sessions: TTL + LRU with an injected clock
+# ---------------------------------------------------------------------------
+
+def test_session_ttl_expiry_and_lru_eviction():
+    clock = {"t": 0.0}
+    svc = _service(max_sessions=2, session_ttl_s=100.0,
+                   clock=lambda: clock["t"])
+    p = svc.register_pool(_pool(9, 96, 12))
+    sid1, _ = svc.open_session(p, k=8)
+    clock["t"] = 50.0
+    sid2, _ = svc.open_session(p, k=8)
+    clock["t"] = 120.0                       # sid1 idle 120s > TTL
+    with pytest.raises(SessionGone):
+        svc.extend_session(sid1, 16)
+    svc.extend_session(sid2, 16)             # idle 70s: still alive
+    # LRU: capacity 2, opening two more evicts sid2
+    sid3, _ = svc.open_session(p, k=8)
+    sid4, _ = svc.open_session(p, k=8)
+    with pytest.raises(SessionGone):
+        svc.extend_session(sid2, 24)
+    svc.extend_session(sid4, 16)
+    stats = svc.sessions.stats()
+    assert stats["expirations"] >= 1 and stats["evictions"] >= 1
+
+
+def test_extension_after_service_roundtrip_matches_oneshot():
+    svc = _service()
+    g = _pool(11, 160, 24)
+    p = svc.register_pool(g)
+    sid, first = svc.open_session(p, k=10, lam=0.3)
+    ext = svc.extend_session(sid, 24)
+    gj = jnp.asarray(g)
+    idx, w, mask, err = omp_select(gj, jnp.sum(gj, axis=0), k=24, lam=0.3)
+    np.testing.assert_array_equal(np.asarray(ext.indices), np.asarray(idx))
+    # first-k prefix of the extension is the original selection
+    np.testing.assert_array_equal(np.asarray(ext.indices)[:10],
+                                  np.asarray(first.indices))
+
+
+# ---------------------------------------------------------------------------
+# failure paths: the queue never wedges, budgets never leak
+# ---------------------------------------------------------------------------
+
+def test_pool_evicted_between_submit_and_drain_fails_ticket_not_queue():
+    svc = _service(max_pools=1)
+    g1 = _pool(20, 64, 8)
+    p1 = svc.register_pool(g1)
+    t1 = svc.submit(p1, k=4, tenant="m")
+    p2 = svc.register_pool(_pool(21, 64, 8))   # LRU-evicts p1
+    t2 = svc.submit(p2, k=4, tenant="m")
+    done = svc.drain()                          # must not raise
+    assert t1.status == "failed" and "unknown pool" in t1.error.lower()
+    assert t2.status == "done"
+    assert svc.scheduler.pending() == 0
+    assert svc.admission.account("m").inflight == 0
+
+
+def test_malformed_target_fails_group_releases_inflight_and_refunds():
+    svc = _service(default_budget_units=1e9)
+    p = svc.register_pool(_pool(22, 64, 8))
+    bad = svc.submit(p, k=4, tenant="m", target=np.zeros((3,), np.float32))
+    good_other_key = svc.submit(p, k=6, tenant="m")
+    used_before = svc.admission.account("m").used_units
+    done = svc.drain()                          # must not raise
+    assert bad.status == "failed" and bad.error
+    assert good_other_key.status == "done"
+    acct = svc.admission.account("m")
+    assert acct.inflight == 0
+    # failed work refunded, delivered work still charged
+    assert acct.used_units == pytest.approx(used_before - bad.cost)
+
+
+def test_chunked_pool_rejects_per_request_valid():
+    g = _pool(23, 96, 8)
+    svc = _service()
+    pid = svc.register_chunked_pool(ChunkedPool(g, chunk_size=32))
+    t = svc.submit(pid, k=8, valid=np.ones((96,), bool))
+    svc.drain()
+    assert t.status == "failed" and "valid" in t.error
+    with pytest.raises(ValueError, match="chunk factory"):
+        svc.register_chunked_pool(
+            lambda: iter([(g, None)]), valid=np.ones((96,), bool))
+
+
+def test_failed_session_open_refunds_budget():
+    svc = _service()
+    svc.admission.set_budget("m", budget_units=1e9)
+    p = svc.register_pool(_pool(24, 64, 8))
+    with pytest.raises(Exception):
+        svc.open_session(p, k=8, tenant="m",
+                         target=np.zeros((5,), np.float32))  # wrong d
+    acct = svc.admission.account("m")
+    assert acct.used_units == 0.0 and acct.inflight == 0
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_stale_session_after_pool_replacement_raises():
+    svc = _service()
+    a, b = _pool(27, 96, 12), _pool(28, 96, 12)
+    svc.register_pool(a, pool_id="p")
+    sid, _ = svc.open_session("p", k=8)
+    svc.register_pool(b, pool_id="p")       # same id, new content
+    with pytest.raises(SessionGone, match="stale"):
+        svc.extend_session(sid, 16)
+
+
+def test_extension_idempotent_retry_charges_nothing():
+    svc = _service()
+    svc.admission.set_budget("m", budget_units=1e9)
+    p = svc.register_pool(_pool(29, 96, 12))
+    sid, first = svc.open_session(p, k=8, tenant="m")
+    used = svc.admission.account("m").used_units
+    again = svc.extend_session(sid, 8)      # no-op retry
+    assert svc.admission.account("m").used_units == used
+    np.testing.assert_array_equal(np.asarray(again.indices),
+                                  np.asarray(first.indices))
+    with pytest.raises(ValueError, match="shrink"):
+        svc.extend_session(sid, 4)
+
+
+def test_registry_dedupe_respects_valid_mask():
+    svc = _service()
+    g = _pool(30, 80, 8)
+    mask = np.arange(80) < 40
+    p_all = svc.register_pool(g)
+    p_masked = svc.register_pool(g, valid=mask)
+    assert p_all != p_masked                # same rows, different pool
+    sel = svc.select(p_masked, k=8)
+    chosen = np.asarray(sel.indices)[np.asarray(sel.mask)]
+    assert mask[chosen].all()
+
+
+def test_random_and_glister_honor_pool_valid():
+    svc = _service()
+    g = _pool(31, 80, 8)
+    mask = np.arange(80) < 10
+    p = svc.register_pool(g, valid=mask)
+    for strategy in ("random", "glister"):
+        sel = svc.select(p, k=8, strategy=strategy, seed=3)
+        chosen = np.asarray(sel.indices)[np.asarray(sel.mask)]
+        assert mask[chosen].all(), strategy
+
+
+def test_registry_overwrite_retires_old_fingerprint():
+    svc = _service()
+    a, b = _pool(25, 64, 8), _pool(26, 64, 8)
+    svc.register_pool(a, pool_id="x")
+    svc.register_pool(b, pool_id="x")           # same id, new content
+    # re-registering A's content must NOT dedupe onto "x" (now holds B)
+    pa = svc.register_pool(a)
+    assert pa != "x"
+    ga = np.asarray(svc.registry.get(pa).grads)
+    np.testing.assert_array_equal(ga, a)
+
+def test_registry_fingerprint_dedupe_and_eviction():
+    svc = _service(max_pools=2)
+    g1, g2, g3 = _pool(0, 64, 8), _pool(1, 64, 8), _pool(2, 64, 8)
+    p1 = svc.register_pool(g1)
+    assert svc.register_pool(g1.copy()) == p1       # content dedupe
+    p2 = svc.register_pool(g2)
+    p3 = svc.register_pool(g3)                      # evicts p1 (LRU)
+    assert p1 not in svc.registry and p2 in svc.registry
+    with pytest.raises(UnknownPool):
+        svc.submit(p1, k=4)
+    assert svc.registry.stats()["evictions"] == 1
+
+
+# ---------------------------------------------------------------------------
+# schedule validation (core/selection.py satellites)
+# ---------------------------------------------------------------------------
+
+def test_warm_start_epochs_validation():
+    assert sel_lib.warm_start_epochs(300, 0.1) == (15, 150)
+    with pytest.raises(ValueError, match="budget_frac"):
+        sel_lib.warm_start_epochs(300, 1.0)
+    with pytest.raises(ValueError, match="budget_frac"):
+        sel_lib.warm_start_epochs(300, 0.0)
+    with pytest.raises(ValueError, match="total_epochs"):
+        sel_lib.warm_start_epochs(0, 0.1)
+    with pytest.raises(ValueError, match="kappa"):
+        sel_lib.warm_start_epochs(300, 0.1, kappa=0.0)
+
+
+def test_selection_schedule_validation():
+    sched = sel_lib.SelectionSchedule(select_every=5, warm_epochs=2,
+                                      total_epochs=20)
+    assert not sched.is_selection_epoch(1)
+    assert sched.is_selection_epoch(2)
+    with pytest.raises(ValueError, match="select_every"):
+        sel_lib.SelectionSchedule(select_every=0)
+    with pytest.raises(ValueError, match="warm_epochs"):
+        sel_lib.SelectionSchedule(select_every=5, warm_epochs=-1)
+    with pytest.raises(ValueError, match="swallows"):
+        sel_lib.SelectionSchedule(select_every=5, warm_epochs=20,
+                                  total_epochs=20)
+
+
+# ---------------------------------------------------------------------------
+# benchmark persistence merge (satellite: no more section overwrites)
+# ---------------------------------------------------------------------------
+
+def test_persist_merges_by_table(tmp_path, monkeypatch):
+    common = pytest.importorskip("benchmarks.common")
+    monkeypatch.setattr(common, "REPO_ROOT", tmp_path)
+    rows_a = []
+    rec_a = common.make_recorder("selection_time", rows_a)
+    rec_a(strategy="gradmatch", pool=512, ms=1.0)
+    common.persist("test", rows_a)
+    # a later partial run writing a different table must keep table A
+    rows_b = []
+    rec_b = common.make_recorder("selection_serve", rows_b)
+    rec_b(strategy="serve-batched", pool=512, ms=2.0)
+    path = common.persist("test", rows_b)
+    import json
+    data = json.loads(path.read_text())
+    tables = {r["table"] for r in data["rows"]}
+    assert tables == {"selection_time", "selection_serve"}
+    # re-running table A replaces its rows instead of appending
+    rows_a2 = []
+    rec_a2 = common.make_recorder("selection_time", rows_a2)
+    rec_a2(strategy="gradmatch", pool=512, ms=9.0)
+    data = json.loads(common.persist("test", rows_a2).read_text())
+    tms = [r["ms"] for r in data["rows"]
+           if r["table"] == "selection_time"]
+    assert tms == [9.0]
+    # legacy rows without a table tag survive via field-signature inference
+    legacy = {"strategy": "gradmatch-stream", "pool": 64, "ms": 3.0}
+    data["rows"].append(legacy)
+    (tmp_path / "BENCH_test.json").write_text(json.dumps(data))
+    data2 = json.loads(common.persist("test", rows_a2).read_text())
+    assert any(r.get("strategy") == "gradmatch-stream"
+               for r in data2["rows"])
