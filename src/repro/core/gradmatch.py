@@ -15,7 +15,7 @@ unweighted mean and the usual LR schedules transfer.
 
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -29,6 +29,9 @@ class SelectionResult(NamedTuple):
     weights: jax.Array  # (k,) f32, >= 0, sums to 1 over valid slots
     mask: jax.Array     # (k,) bool
     err: jax.Array      # () f32  final E_lambda value (diagnostic)
+    # Solver accounting (streaming entry points attach their SelectStats;
+    # None elsewhere, so array-only consumers are unaffected).
+    stats: Optional[Any] = None
 
     @property
     def size(self):

@@ -200,11 +200,14 @@ def _fl_gains_ids(sim, grads, sqnorms, row_okf, l_max, cover, ids,
     return jnp.sum(jnp.maximum(rows - cover[None, :], 0.0), axis=1), rows
 
 
-def _fl_gains_all(sim, grads, row_okf, l_max, cover, avail, otf: bool):
-    """Full exact gain scan via the fused kernel dispatch."""
+def _fl_gains_all(sim, grads, row_okf, l_max, cover, avail, otf: bool,
+                  sqnorms=None):
+    """Full exact gain scan via the fused kernel dispatch.  ``sqnorms``
+    hands the engine's hoisted row norms down to the on-the-fly scan so
+    the dispatch does not recompute them per rescan."""
     if otf:
         return ops.fl_gain_argmax_otf(grads, cover, row_okf > 0, avail,
-                                      l_max)
+                                      l_max, sqnorms=sqnorms)
     return ops.fl_gain_argmax(sim, cover, avail)
 
 
@@ -220,6 +223,17 @@ def _fl_col_of(sim, grads, sqnorms, row_okf, l_max, e, otf: bool):
                                              "otf"))
 def _fl_lazy(sim, grads, valid, l_max, *, k: int, block: int,
              max_tries: int, otf: bool):
+    # Escalation tier: when the top-B block cannot certify, one refresh
+    # of a much wider stale-bound block usually can — at O(wide·n)
+    # versus the O(n²) full rescan it replaces, which dominates
+    # on-the-fly runs (pool 32768: a rescan reconstructs the whole
+    # similarity from grads).  Only the truly adversarial rounds (ties,
+    # mass bound decay) still pay the rescan.  The otf escalation runs
+    # through the *blocked* column scan (peak O(row_block·wide), and
+    # reduction-order-identical to the full rescan's gains, which share
+    # the implementation); the resident escalation gathers similarity
+    # rows and is kept narrower so the (wide, n) gather stays small.
+    wide = min((64 if otf else 8) * block, valid.shape[0])
     n = valid.shape[0]
     row_okf = valid.astype(jnp.float32)
     if otf:
@@ -286,22 +300,54 @@ def _fl_lazy(sim, grads, valid, l_max, *, k: int, block: int,
                 try_cond, try_body, st0)
 
             def keep(_):
-                return bounds, e_b, g_b, col_b
+                return bounds, e_b, g_b, col_b, jnp.int32(0)
 
-            def rescan(_):
+            def rescan_from(bounds):
                 gains, idx, val = _fl_gains_all(sim, grads, row_okf,
-                                                l_max, cover, avail, otf)
-                return gains, idx, val, col_of(idx)
+                                                l_max, cover, avail, otf,
+                                                sqnorms=sqnorms)
+                return gains, idx, val, col_of(idx), jnp.int32(1)
 
-            bounds, e, gain, col = lax.cond(cert, keep, rescan,
-                                            operand=None)
+            if wide > block:
+                def fallback(_):
+                    _, wids = lax.top_k(jnp.where(avail, bounds,
+                                                  _NEG_INF), wide)
+                    if otf:
+                        exact = fl_gains_cols(
+                            grads[wids], sqnorms[wids], grads, sqnorms,
+                            cover, row_okf, l_max, block=1024)
+                    else:
+                        exact, rows_w = gains_ids(cover, wids)
+                    b2 = bounds.at[wids].set(exact)
+                    ex_m = jnp.where(avail[wids], exact, _NEG_INF)
+                    bmax, e2, pos2 = _lowest_id_argmax(ex_m, wids, n)
+                    outside = jnp.max(jnp.where(avail, b2,
+                                                _NEG_INF).at[wids].set(
+                                                    _NEG_INF))
+                    thresh = jnp.where(jnp.isfinite(outside),
+                                       outside + rel * jnp.abs(outside),
+                                       outside)
+
+                    def keep2(_):
+                        col = (col_of(e2) if otf else rows_w[pos2])
+                        return b2, e2, ex_m[pos2], col, jnp.int32(0)
+
+                    return lax.cond(bmax > thresh, keep2,
+                                    lambda _: rescan_from(b2),
+                                    operand=None)
+            else:
+                def fallback(_):
+                    return rescan_from(bounds)
+
+            bounds, e, gain, col, scanned = lax.cond(cert, keep, fallback,
+                                                     operand=None)
             indices = indices.at[t].set(e)
             mask = mask.at[t].set(True)
             cover = jnp.maximum(cover, col)
             picked = picked.at[t].set(gain)
             return (indices, mask, cover, bounds, picked, evals + tries,
-                    rescans + jnp.int32(~cert),
-                    certified + jnp.int32(cert))
+                    rescans + scanned,
+                    certified + jnp.int32(scanned == 0))
 
         # Exhausted pool (k > #valid): skip the whole round — no block
         # refreshes, no rescan, stats untouched (they are the published
@@ -312,7 +358,7 @@ def _fl_lazy(sim, grads, valid, l_max, *, k: int, block: int,
     # exactly (stale +inf bounds would force max_tries wasted refreshes).
     cover0 = jnp.zeros((n,), jnp.float32)
     gains0, e0, val0 = _fl_gains_all(sim, grads, row_okf, l_max, cover0,
-                                     valid, otf)
+                                     valid, otf, sqnorms=sqnorms)
     grow0 = jnp.any(valid)
     indices = jnp.full((k,), -1, jnp.int32).at[0].set(
         jnp.where(grow0, e0, -1))

@@ -115,6 +115,27 @@ def proxy_chunk_stream(pool_iter, proxy_fn, params, pick: str = "bias"):
     return chunks
 
 
+def proxy_row_fetch(x, y, proxy_fn, params, pick: str = "bias"):
+    """Exact-proxy-row fetch for the streaming engine's repair/refill
+    tiers: re-extracts the proxies of a handful of rows by global id.
+
+    Valid because the proxy extractors are row-wise (softmax/products
+    within each row only), so ``proxy_fn`` on a gathered subset yields
+    bit-identical rows to the chunked extraction the scan path used —
+    the certified repairs stay exact without a full re-extraction pass.
+    """
+    import numpy as np
+
+    which = {"per_class": 0, "bias": 1}[pick]
+
+    def fetch(ids):
+        ids = np.asarray(ids)
+        return np.asarray(proxy_fn(params, x[ids], y[ids])[which],
+                          np.float32)
+
+    return fetch
+
+
 def per_batch(proxies: jax.Array, batch_size: int) -> jax.Array:
     """Group per-example proxies into per-mini-batch (PB) proxies.
 

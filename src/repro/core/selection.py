@@ -59,6 +59,7 @@ def select(
     omp_method: str = "incremental",   # OMP solver for gradmatch strategies
     chunk_size: int = 2048,            # gradmatch-stream: pool chunk rows
     stream_buffer: int = 256,          # gradmatch-stream: top-M buffer slots
+    stream_cache_bytes: int = stream_lib.DEFAULT_CACHE_BYTES,
 ) -> SelectionResult:
     """Resolve one selection round.  ``val_target`` switches isValid=True.
 
@@ -72,11 +73,15 @@ def select(
     and benchmark baselines).
 
     ``"gradmatch-stream"`` runs the certified-exact streaming block-OMP
-    (``core/streaming.py``) over the proxies chunked by ``chunk_size`` —
-    the same subset as ``"gradmatch"`` with pooled (non-per-class) OMP, at
-    ``O(chunk + stream_buffer·d)`` peak pool memory.  Callers with a truly
-    out-of-core pool should use ``streaming.gradmatch_streaming`` directly
-    with a chunk factory (the trainer does).
+    (``core/streaming.py``, DESIGN.md §7) over the proxies chunked by
+    ``chunk_size`` — the same subset as ``"gradmatch"`` with pooled
+    (non-per-class) OMP, at ``O(chunk + stream_buffer·d +
+    stream_cache_bytes)`` peak pool memory (the compressed chunk cache
+    is what lets the engine commit many rounds per loader pass; set
+    ``stream_cache_bytes=0`` to disable it).  The returned result
+    carries the engine's ``SelectStats``.  Callers with a truly
+    out-of-core pool should use ``streaming.gradmatch_streaming``
+    directly with a chunk factory (the trainer does).
     """
     n = proxies.shape[0]
     if strategy == "full":
@@ -96,7 +101,8 @@ def select(
     if strategy == "gradmatch-stream":
         return stream_lib.gradmatch_streaming_array(
             proxies, k, target=val_target, lam=lam, eps=eps,
-            chunk_size=chunk_size, buffer_size=stream_buffer)
+            chunk_size=chunk_size, buffer_size=stream_buffer,
+            cache_bytes=stream_cache_bytes)
     if strategy == "gradmatch-pb":
         return gm_lib.gradmatch_pb(
             proxies, batch_size, max(k // batch_size, 1), lam=lam, eps=eps,

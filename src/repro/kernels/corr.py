@@ -76,6 +76,119 @@ def corr(grads: jax.Array, residual: jax.Array, *, interpret: bool = False
     return out[:n, 0]
 
 
+def _bound_max_kernel(g_ref, nrm_ref, err_ref, r_ref, sc_ref, mask_ref,
+                      val_ref, idx_ref, cnt_ref, acc_ref, *,
+                      absolute: bool, n_valid: int):
+    """Fused interval-bound scan (streaming OMP certification, §7).
+
+    Row tiles of the bf16 cache are matvec'd against the residual across
+    d chunks; at the last chunk the per-row upper bound ``u = s̃ +
+    (e + acc·‖g‖)·‖r‖`` is formed from the f32 sidecars and folded into
+    running (max, lowest-index, offender-count) SMEM scalars — ``u``
+    never hits HBM.  ``sc_ref`` is (1, 3) SMEM: [‖r‖, acc, thresh].
+    """
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    last_j = pl.num_programs(1) - 1
+
+    @pl.when(j == 0)
+    def _init_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    g = g_ref[...].astype(jnp.float32)          # (TILE_N, TILE_D)
+    r = r_ref[...].astype(jnp.float32)          # (TILE_D, 1)
+    acc_ref[...] += g @ r
+
+    @pl.when(j == last_j)
+    def _reduce():
+        neg_inf = jnp.float32(-jnp.inf)
+        rnorm = sc_ref[0, 0]
+        acc = sc_ref[0, 1]
+        thresh = sc_ref[0, 2]
+        s = acc_ref[...]                        # (TILE_N, 1)
+        if absolute:
+            s = jnp.abs(s)
+        u = s + (err_ref[...] + acc * nrm_ref[...]) * rnorm
+        u = jnp.where(mask_ref[...] > 0, u, neg_inf)
+        tile_max = jnp.max(u)
+        row_ids = jax.lax.broadcasted_iota(jnp.int32, u.shape, 0)
+        tile_idx = jnp.min(
+            jnp.where(u == tile_max, row_ids, jnp.int32(n_valid))
+        ) + i * TILE_N
+        tile_cnt = jnp.sum(((mask_ref[...] > 0)
+                            & (u >= thresh)).astype(jnp.int32))
+
+        @pl.when(i == 0)
+        def _first():
+            val_ref[0, 0] = tile_max
+            idx_ref[0, 0] = tile_idx
+            cnt_ref[0, 0] = tile_cnt
+
+        @pl.when(i > 0)
+        def _fold():
+            cnt_ref[0, 0] += tile_cnt
+
+            @pl.when(tile_max > val_ref[0, 0])
+            def _better():
+                val_ref[0, 0] = tile_max
+                idx_ref[0, 0] = tile_idx
+
+
+@functools.partial(jax.jit, static_argnames=("absolute", "interpret"))
+def bound_max(rows: jax.Array, norms: jax.Array, errn: jax.Array,
+              residual: jax.Array, acc: jax.Array, thresh: jax.Array,
+              mask: jax.Array, *, absolute: bool = False,
+              interpret: bool = False
+              ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused compressed-cache bound scan: see ``ref.bound_max_ref`` for
+    the contract.  Pads n to TILE_N (padded rows masked out, zero
+    sidecars) and d to TILE_D (zero padding is exact for the dot)."""
+    n, d = rows.shape
+    n_pad = (-n) % TILE_N
+    d_pad = (-d) % TILE_D
+    g = jnp.pad(rows, ((0, n_pad), (0, d_pad)))
+    r = jnp.pad(residual.astype(jnp.float32), (0, d_pad)).reshape(-1, 1)
+    nrm = jnp.pad(norms.astype(jnp.float32), (0, n_pad)).reshape(-1, 1)
+    err = jnp.pad(errn.astype(jnp.float32), (0, n_pad)).reshape(-1, 1)
+    m = jnp.pad(mask.astype(jnp.float32), (0, n_pad)).reshape(-1, 1)
+    rnorm = jnp.sqrt(jnp.sum(r * r))
+    sc = jnp.stack([rnorm, jnp.asarray(acc, jnp.float32),
+                    jnp.asarray(thresh, jnp.float32)]).reshape(1, 3)
+    np_, dp = g.shape
+
+    kernel = functools.partial(_bound_max_kernel, absolute=absolute,
+                               n_valid=np_)
+    val, idx, cnt = pl.pallas_call(
+        kernel,
+        grid=(np_ // TILE_N, dp // TILE_D),
+        in_specs=[
+            pl.BlockSpec((TILE_N, TILE_D), lambda i, j: (i, j)),
+            pl.BlockSpec((TILE_N, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((TILE_N, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((TILE_D, 1), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, 3), lambda i, j: (0, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((TILE_N, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0),
+                         memory_space=pltpu.SMEM),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.int32),
+            jax.ShapeDtypeStruct((1, 1), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((TILE_N, 1), jnp.float32)],
+        interpret=interpret,
+    )(g, nrm, err, r, sc, m)
+    return val[0, 0], idx[0, 0], cnt[0, 0]
+
+
 def _corr_argmax_kernel(c_ref, w_ref, base_ref, mask_ref, idx_ref, val_ref,
                         acc_ref, *, absolute: bool, n_valid: int):
     i = pl.program_id(0)

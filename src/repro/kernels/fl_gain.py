@@ -173,7 +173,9 @@ def _fl_gain_otf_kernel(gr_ref, gc_ref, rn_ref, cn_ref, cover_ref, rok_ref,
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def fl_gain_argmax_otf(grads: jax.Array, cover: jax.Array,
                        row_ok: jax.Array, mask: jax.Array,
-                       l_max: jax.Array, *, interpret: bool = False
+                       l_max: jax.Array,
+                       sqnorms: jax.Array | None = None, *,
+                       interpret: bool = False
                        ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Gain scan with the similarity computed tile-by-tile from ``grads``.
 
@@ -185,13 +187,16 @@ def fl_gain_argmax_otf(grads: jax.Array, cover: jax.Array,
 
     The (n, n) similarity never exists: each (TILE_I, TILE_J) block is
     reconstructed from two gradient tiles and folded into the per-column
-    gain accumulator immediately.
+    gain accumulator immediately.  ``sqnorms`` (squared row norms of the
+    unpadded grads) skips the per-call norm reduction when the caller
+    already holds them; zero-padded rows have zero norm either way.
     """
     n, d = grads.shape
     n_pad = (-n) % TILE_I          # TILE_I == TILE_J: one row/col pad
     d_pad = (-d) % TILE_D
     g = jnp.pad(grads.astype(jnp.float32), ((0, n_pad), (0, d_pad)))
-    sqn = jnp.sum(g * g, axis=1)
+    sqn = (jnp.sum(g * g, axis=1) if sqnorms is None
+           else jnp.pad(jnp.asarray(sqnorms, jnp.float32), (0, n_pad)))
     rn = sqn.reshape(-1, 1)
     cn = sqn.reshape(1, -1)
     c = jnp.pad(cover, (0, n_pad)).astype(jnp.float32).reshape(-1, 1)

@@ -38,6 +38,15 @@ def _mode() -> str:
     return "pallas" if jax.default_backend() == "tpu" else "ref"
 
 
+def active_mode() -> str:
+    """The dispatch mode currently in effect ('pallas' | 'interpret' |
+    'ref') — for callers whose *surrounding* computation depends on it
+    (e.g. streaming's commit loop materializes per-row bounds for its
+    lookahead envelope on the ref path but uses the fused ``bound_max``
+    kernel on TPU, where that vector must never hit HBM)."""
+    return _mode()
+
+
 def corr(grads: jax.Array, residual: jax.Array) -> jax.Array:
     """OMP scores  G @ r  -> (n,) f32."""
     mode = _mode()
@@ -62,6 +71,24 @@ def corr_argmax(colcache: jax.Array, w: jax.Array, base: jax.Array,
     return corr_kernel.corr_argmax(colcache, w, base, mask,
                                    absolute=absolute,
                                    interpret=(mode == "interpret"))
+
+
+def bound_max(rows: jax.Array, norms: jax.Array, errn: jax.Array,
+              residual: jax.Array, acc: jax.Array, thresh: jax.Array,
+              mask: jax.Array, *, absolute: bool = False
+              ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused interval-bound scan over the streaming compressed chunk
+    cache (DESIGN.md §7): (max upper bound, its index, #rows with
+    ``u >= thresh``) for ``u = s̃ + (e + acc·‖g‖)·‖r‖`` over bf16 rows
+    with f32 norm/error sidecars.  One streaming pass on TPU (``u``
+    never hits HBM); the jnp reference fuses well enough on CPU."""
+    mode = _mode()
+    if mode == "ref":
+        return ref.bound_max_ref(rows, norms, errn, residual, acc,
+                                 thresh, mask, absolute=absolute)
+    return corr_kernel.bound_max(rows, norms, errn, residual, acc,
+                                 thresh, mask, absolute=absolute,
+                                 interpret=(mode == "interpret"))
 
 
 def corr_batched(grads: jax.Array, vecs: jax.Array) -> jax.Array:
@@ -132,7 +159,8 @@ def fl_gain_argmax(sim: jax.Array, cover: jax.Array, mask: jax.Array
 
 
 def fl_gain_argmax_otf(grads: jax.Array, cover: jax.Array,
-                       row_ok: jax.Array, mask: jax.Array, l_max: jax.Array
+                       row_ok: jax.Array, mask: jax.Array,
+                       l_max: jax.Array, sqnorms: jax.Array | None = None
                        ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Gain scan with tile-on-the-fly similarity from ``grads`` (n, d).
 
@@ -140,12 +168,16 @@ def fl_gain_argmax_otf(grads: jax.Array, cover: jax.Array,
     materialized in any memory space — the kernel (and the blocked jnp
     reference) reconstruct ``s_ij = (l_max - ||g_i - g_j||) * row_ok_i``
     tile by tile.  ``l_max`` must upper-bound all pairwise distances.
+    ``sqnorms`` optionally hands in precomputed squared row norms (the
+    lazy engine hoists them once per selection; without this the dispatch
+    re-reduced them on every rescan).
     """
     mode = _mode()
     if mode == "ref":
-        return ref.fl_gain_argmax_otf_ref(grads, cover, row_ok, mask, l_max)
+        return ref.fl_gain_argmax_otf_ref(grads, cover, row_ok, mask,
+                                          l_max, sqnorms=sqnorms)
     return fl_gain_kernel.fl_gain_argmax_otf(
-        grads, cover, row_ok, mask, l_max,
+        grads, cover, row_ok, mask, l_max, sqnorms=sqnorms,
         interpret=(mode == "interpret"))
 
 

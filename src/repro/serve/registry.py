@@ -84,6 +84,14 @@ class PoolEntry:
     chunk_iter: Optional[Callable] = None        # chunked pools: factory
     valid: Optional[jnp.ndarray] = None          # (n,) bool or None
     target_sum: Optional[jnp.ndarray] = None     # (d,) default target
+    # Chunked pools: the compressed chunk cache (DESIGN.md §7), warmed by
+    # the admission summing pass and shared by every streaming request —
+    # certified buffer rounds re-verify against it instead of re-reading
+    # the loader — plus the exact-row fetch capability for the engine's
+    # repair/refill tiers (None for factory-only pools).
+    cache: Optional[stream_lib.ChunkCache] = field(default=None,
+                                                   repr=False)
+    row_fetch: Optional[Callable] = field(default=None, repr=False)
     # CRAIG scan cache, resolved lazily on the first craig request:
     _fl: Optional[tuple] = field(default=None, repr=False)
 
@@ -142,12 +150,16 @@ class PoolRegistry:
         return pid
 
     def register_chunked(self, pool, pool_id: Optional[str] = None,
-                         valid=None) -> str:
+                         valid=None,
+                         cache_bytes: int = stream_lib.DEFAULT_CACHE_BYTES
+                         ) -> str:
         """Admit a ``ChunkedPool`` (or any ``(chunk, valid)`` factory).
 
-        The default target is computed with one summing pass now —
-        admission is the one place that pass is paid; every later request
-        reuses it.
+        The default target is computed with one summing pass now — and
+        the *same* pass warms the pool's compressed chunk cache, so the
+        admission scan is never re-paid: every streaming request's
+        certified rounds (and, for ``ChunkedPool``-backed pools, its
+        exact-row repairs) hit memory instead of the loader.
         """
         if callable(pool):
             if valid is not None:
@@ -156,10 +168,17 @@ class PoolRegistry:
                     "bake the mask into a custom chunk factory's (chunk, "
                     "valid) pairs instead")
             chunk_iter = pool
+            row_fetch = None
         else:
             chunk_iter = stream_lib.chunked_pool_iter(pool, valid=valid)
-        target, n = stream_lib.streaming_target(chunk_iter)
-        first_chunk, _ = next(iter(chunk_iter()))
+            row_fetch = stream_lib.array_row_fetch(pool.x)
+        first = next(iter(chunk_iter()), None)
+        if first is None:
+            raise ValueError("empty pool iterator")
+        first_chunk = first[0]
+        cache = stream_lib.ChunkCache(
+            int(cache_bytes), int(np.asarray(first_chunk).shape[1]))
+        target, n = stream_lib.streaming_target(chunk_iter, cache=cache)
         fp_src = np.asarray(first_chunk, np.float32)
         fp = hashlib.sha1(
             repr((n, fp_src.shape)).encode()
@@ -172,7 +191,8 @@ class PoolRegistry:
         pid = pool_id or f"chunked-{fp}"
         entry = PoolEntry(pool_id=pid, kind="chunked", n=int(n),
                           d=int(target.shape[0]), fingerprint=fp,
-                          chunk_iter=chunk_iter, target_sum=target)
+                          chunk_iter=chunk_iter, target_sum=target,
+                          cache=cache, row_fetch=row_fetch)
         self._admit(pid, fp, entry)
         return pid
 
@@ -216,4 +236,7 @@ class PoolRegistry:
             "resident_bytes": sum(
                 e.n * e.d * 4 for e in self._pools.values()
                 if e.kind == "array"),
+            "cache_bytes": sum(
+                e.cache.stats()["resident_bytes"]
+                for e in self._pools.values() if e.cache is not None),
         }

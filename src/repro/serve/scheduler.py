@@ -241,9 +241,13 @@ class RequestScheduler:
                     "pools — register the pool with the mask instead")
             target = (entry.target_sum if req.target is None
                       else jnp.asarray(req.target, jnp.float32))
+            # The admission-warmed compressed cache + row fetcher make
+            # this request's certified rounds and repairs hit memory
+            # instead of re-paying loader passes (DESIGN.md §7).
             return stream_lib.gradmatch_streaming(
                 entry.chunk_iter, req.k, target=target, lam=req.lam,
-                eps=req.eps, buffer_size=self.stream_buffer)
+                eps=req.eps, buffer_size=self.stream_buffer,
+                cache=entry.cache, row_fetch=entry.row_fetch)
         if entry.kind != "array":
             raise ValueError(
                 f"strategy {req.strategy!r} needs a resident pool")

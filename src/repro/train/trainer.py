@@ -53,6 +53,10 @@ class TrainerConfig:
     omp_method: str = "incremental"    # OMP solver for gradmatch strategies
     chunk_size: int = 1024             # gradmatch-stream: proxy chunk rows
     stream_buffer: int = 256           # gradmatch-stream: top-M buffer slots
+    # gradmatch-stream: compressed proxy-chunk cache budget (bf16 rows +
+    # f32 sidecars, DESIGN.md §7) — certified buffer rounds re-verify
+    # against this cache instead of re-extracting proxies per round.
+    stream_cache_bytes: int = 256 << 20
     seed: int = 0
     checkpoint_dir: Optional[str] = None
     checkpoint_every: int = 20
@@ -114,14 +118,21 @@ class AdaptiveTrainer:
         if tc.strategy == "gradmatch-stream":
             # Out-of-core path: proxies are extracted one chunk at a time
             # through the chunked pool — the (n, d) proxy matrix never
-            # exists on host or device (core/streaming.py).
+            # exists on host or device (core/streaming.py, DESIGN.md §7).
+            # The row fetcher re-extracts individual proxy rows on demand
+            # (row-wise extractors make that bit-exact), so the engine's
+            # repair and cache-refill tiers work without a loader pass —
+            # certified rounds never re-run the proxy forward pass.
             pool = ChunkedPool(self.train_ds.x, self.train_ds.y,
                                tc.chunk_size)
             chunks = proxy_lib.proxy_chunk_stream(pool.chunks,
                                                   self.proxy_fn, params)
+            fetch = proxy_lib.proxy_row_fetch(
+                self.train_ds.x, self.train_ds.y, self.proxy_fn, params)
             sel = stream_lib.gradmatch_streaming(
                 chunks, k, target=val_target, lam=tc.hp.lam, eps=tc.hp.eps,
-                buffer_size=tc.stream_buffer)
+                buffer_size=tc.stream_buffer,
+                cache_bytes=tc.stream_cache_bytes, row_fetch=fetch)
             jax.block_until_ready(sel.weights)
             return sel, time.perf_counter() - t0
         pcg, bias = self.proxy_fn(params, self.train_ds.x, self.train_ds.y)

@@ -271,3 +271,79 @@ def test_hidden_grad_fused_bf16_logits():
     resid, _ = ref.lastlayer_grad_ref(jnp.zeros((n, 1)), z, y)
     want = resid @ w.T.astype(jnp.float32)
     np.testing.assert_allclose(got, want, rtol=5e-2, atol=5e-2)
+
+
+# ---------------------------------------------------------------------------
+# bound_max: fused compressed-cache interval scan (streaming OMP, §7)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,d", [(64, 32), (200, 48), (130, 520)])
+@pytest.mark.parametrize("absolute", [False, True])
+def test_bound_max_matches_ref(n, d, absolute):
+    from repro.kernels.corr import bound_max
+
+    rng = np.random.default_rng(n + d)
+    rows_f = rng.standard_normal((n, d)).astype(np.float32)
+    rows = jnp.asarray(rows_f).astype(jnp.bfloat16)
+    norms = jnp.sqrt(jnp.sum(jnp.asarray(rows_f) ** 2, axis=1))
+    errn = jnp.sqrt(jnp.sum(
+        (jnp.asarray(rows_f) - rows.astype(jnp.float32)) ** 2, axis=1))
+    r = jnp.asarray(rng.standard_normal((d,)).astype(np.float32))
+    mask = jnp.asarray(rng.random(n) < 0.7)
+    acc = jnp.float32(1e-5)
+    # a mid-range threshold so the offender count is non-trivial
+    thresh = jnp.float32(0.5)
+    gv, gi, gc = bound_max(rows, norms, errn, r, acc, thresh, mask,
+                           absolute=absolute, interpret=True)
+    rv, ri, rc = ref.bound_max_ref(rows, norms, errn, r, acc, thresh,
+                                   mask, absolute=absolute)
+    np.testing.assert_allclose(float(gv), float(rv), rtol=1e-6)
+    assert int(gi) == int(ri)
+    assert int(gc) == int(rc)
+
+
+def test_bound_max_upper_bounds_exact_scores():
+    """The certified invariant: u_i from the bf16 rows + sidecars must
+    upper-bound the exact f32 score of every row."""
+    from repro.kernels.corr import bound_max
+
+    rng = np.random.default_rng(7)
+    n, d = 256, 64
+    rows_f = rng.standard_normal((n, d)).astype(np.float32)
+    rows = jnp.asarray(rows_f).astype(jnp.bfloat16)
+    norms = jnp.sqrt(jnp.sum(jnp.asarray(rows_f) ** 2, axis=1))
+    errn = jnp.sqrt(jnp.sum(
+        (jnp.asarray(rows_f) - rows.astype(jnp.float32)) ** 2, axis=1))
+    r = jnp.asarray(rng.standard_normal((d,)).astype(np.float32))
+    acc = jnp.float32(d * 2.0 ** -23 * 1.25)
+    exact = np.asarray(jnp.asarray(rows_f) @ r)
+    for i in range(0, n, 37):       # spot-check single-row masks
+        mask = jnp.zeros((n,), bool).at[i].set(True)
+        uv, ui, _ = bound_max(rows, norms, errn, r, acc,
+                              jnp.float32(np.inf), mask, interpret=True)
+        assert int(ui) == i
+        assert float(uv) >= exact[i] - 1e-12, (i, float(uv), exact[i])
+
+
+def test_bound_max_all_masked_and_ties():
+    from repro.kernels.corr import bound_max
+
+    n, d = 64, 32
+    rows = jnp.ones((n, d), jnp.bfloat16)
+    norms = jnp.full((n,), float(np.sqrt(d)))
+    errn = jnp.zeros((n,))
+    r = jnp.ones((d,))
+    none = jnp.zeros((n,), bool)
+    v, i, c = bound_max(rows, norms, errn, r, jnp.float32(0.0),
+                        jnp.float32(0.0), none, interpret=True)
+    rv, ri, rc = ref.bound_max_ref(rows, norms, errn, r,
+                                   jnp.float32(0.0), jnp.float32(0.0),
+                                   none)
+    assert float(v) == float(rv) == -np.inf
+    assert int(i) == int(ri) == 0
+    assert int(c) == int(rc) == 0
+    # exact ties across all rows resolve to the lowest index
+    allm = jnp.ones((n,), bool)
+    v, i, c = bound_max(rows, norms, errn, r, jnp.float32(0.0),
+                        jnp.float32(0.0), allm, interpret=True)
+    assert int(i) == 0 and int(c) == n

@@ -212,3 +212,45 @@ def test_greedy_sentinel_fix_craig_glister():
     sel = glister(jnp.asarray(g), jnp.asarray(target), 8)
     got = np.asarray(sel.indices)[np.asarray(sel.mask)]
     assert len(got) == len(set(got.tolist())), got
+
+
+# ---------------------------------------------------------------------------
+# multi-round-per-pass engine grid (PR 5): cache + repair tiers must stay
+# index-exact across buffer/chunk/cache configurations
+# ---------------------------------------------------------------------------
+
+MR_GRID = [
+    # (n, d, k, buffer, chunk, cache_bytes) — cache ample / LRU-bounded /
+    # thrashing (smaller than one chunk), buffers from tiny to pool-sized
+    (256, 16, 48, 32, 96, 1 << 20),
+    (256, 16, 48, 64, 64, 6000),          # ~1-2 chunk slots: evictions
+    (320, 24, 40, 16, 100, 64),           # thrash: interval rung disabled
+    (192, 12, 32, 256, 48, 1 << 20),      # buffer swallows the pool
+]
+
+
+@pytest.mark.parametrize("n,d,k,buf,chunk,cbytes", MR_GRID)
+@pytest.mark.parametrize("variant", ["plain", "dups", "masked", "kbig"])
+def test_multiround_grid_parity(n, d, k, buf, chunk, cbytes, variant):
+    g = _pool(100 + n + k, n, d)
+    valid = None
+    if variant == "dups":
+        g[1::2] = g[::2]
+    elif variant == "masked":
+        valid = np.random.default_rng(n).random(n) < 0.5
+    elif variant == "kbig":
+        valid = np.arange(n) < (k // 2)       # k exceeds the valid pool
+    vm = None if valid is None else valid[:, None]
+    target = (g if vm is None else g * vm).sum(axis=0)
+    out = stream_lib.omp_select_streaming(
+        stream_lib.array_chunks(g, chunk, valid=valid),
+        jnp.asarray(target), k, buffer_size=buf, cache_bytes=cbytes,
+        row_fetch=stream_lib.array_row_fetch(g))
+    v = None if valid is None else jnp.asarray(valid)
+    ref = omp_select(jnp.asarray(g), jnp.asarray(target), k=k, valid=v)
+    _assert_parity((out.indices, out.weights, out.mask, out.err), ref,
+                   f"multiround[{variant}] vs incremental")
+    assert out.stats.rounds <= k
+    if variant == "plain" and cbytes >= (1 << 20):
+        # ample cache + repair tier: the pass count must be amortized
+        assert out.stats.passes <= max(k // 8 + 2, 2), out.stats.summary()

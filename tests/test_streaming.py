@@ -210,3 +210,205 @@ def test_streaming_guard_on_unstable_iterator():
     out = stream_lib.omp_select_streaming(empty, jnp.ones((8,)), 4)
     assert int(np.asarray(out.mask).sum()) == 0
     assert out.stats.passes == 0
+
+
+# ---------------------------------------------------------------------------
+# multi-round-per-pass engine: compressed cache, repairs, refills (§7)
+# ---------------------------------------------------------------------------
+
+def test_multi_round_certification_with_cache():
+    """With the compressed cache + row fetch, the engine commits many
+    rounds per loader pass: the pass count must be a small fraction of
+    the rounds (the whole point of PR 5) while staying index-exact."""
+    n, d, k = 1024, 32, 96
+    g = _pool(20, n, d)
+    target = g.sum(axis=0)
+    out = stream_lib.omp_select_streaming(
+        stream_lib.array_chunks(g, 256), target, k, buffer_size=128,
+        row_fetch=stream_lib.array_row_fetch(g))
+    _assert_matches(out, _ref(g, target, k))
+    s = out.stats
+    assert s.passes <= k // 8 + 2, s.summary()
+    assert s.certified_rounds >= 0.5 * s.rounds, s.summary()
+    assert s.cache_hit_rate == 1.0, s.summary()
+
+
+def test_cache_thrash_smaller_than_chunk():
+    """A cache too small for even one chunk disables the interval rung;
+    the sketch rung + loader rescans must still terminate index-exact
+    (the PR-2 worst case)."""
+    g = _pool(21, 300, 16)
+    target = g.sum(axis=0)
+    out = stream_lib.omp_select_streaming(
+        stream_lib.array_chunks(g, 100), target, 24, buffer_size=32,
+        cache_bytes=64,                      # < one row of sidecars
+        row_fetch=stream_lib.array_row_fetch(g))
+    _assert_matches(out, _ref(g, target, 24))
+    assert out.stats.cache_hits == 0
+    assert out.stats.passes >= 1
+
+
+def test_cache_lru_eviction_partial_coverage():
+    """A cache holding ~half the chunks evicts LRU but keeps the solver
+    exact: uncached chunks fall back to the sketch bound."""
+    from repro.core.streaming import ChunkCache
+
+    n, d, chunk = 512, 16, 128
+    g = _pool(22, n, d)
+    target = g.sum(axis=0)
+    cache = ChunkCache(2 * 128 * (2 * d + 15) + 64, d)   # ~2 of 4 chunks
+    out = stream_lib.omp_select_streaming(
+        stream_lib.array_chunks(g, chunk), target, 48, buffer_size=64,
+        cache=cache, row_fetch=stream_lib.array_row_fetch(g))
+    _assert_matches(out, _ref(g, target, 48))
+    assert cache.cap_slots < 4
+    assert cache.evictions > 0
+    assert out.stats.cache_misses > 0       # sketch rung was consulted
+
+
+def test_adversarial_bf16_resolution_pool():
+    """Rows that differ below bf16 resolution: every interval overlaps,
+    so the certificate (almost) never fires — the engine must fail
+    closed into repairs/rescans and still match the oracle index-exactly
+    (f32 scoring resolves what bf16 cannot).
+
+    The oracle here is the *dense* solver: the near-rank-1 pool puts the
+    residual at the f32 noise floor within a few rounds, where the
+    incremental solver's cached-correlation scores diverge from the
+    direct ``G @ r`` ones — streaming scores the pool directly, so it
+    tracks the dense formulation through that regime (see
+    tests/test_omp_parity.py's grid notes)."""
+    from repro.core.omp import omp_select_dense
+
+    rng = np.random.default_rng(23)
+    n, d, k = 96, 16, 12
+    base = rng.standard_normal((d,)).astype(np.float32)
+    g = np.tile(base, (n, 1))
+    # Per-row perturbation ~1e-3 relative: far below the bf16 interval
+    # width, far above the f32 noise floor for the early rounds.
+    g += 1e-3 * rng.standard_normal((n, d)).astype(np.float32)
+    target = g.sum(axis=0)
+    out = stream_lib.omp_select_streaming(
+        stream_lib.array_chunks(g, 32), target, k, buffer_size=16,
+        chunk_topm=8, row_fetch=stream_lib.array_row_fetch(g))
+    dense = omp_select_dense(jnp.asarray(g), jnp.asarray(target), k=k)
+    _assert_matches(out, dense)
+    assert out.stats.passes <= k + 2
+
+
+def test_pass_budget_error_carries_stats():
+    """The max_passes guard must raise *with* the accumulated stats so
+    the failure is diagnosable (satellite: no more silent wasted work)."""
+    g = _pool(24, 128, 8)
+    target = g.sum(axis=0)
+    with pytest.raises(stream_lib.StreamingPassBudgetError) as ei:
+        stream_lib.omp_select_streaming(
+            stream_lib.array_chunks(g, 64), target, 64, buffer_size=4,
+            chunk_topm=2, cache_bytes=0, max_passes=1)
+    assert ei.value.stats.passes == 1
+    assert "passes=1" in str(ei.value)
+    assert ei.value.cap == 1
+
+
+def test_select_stats_exposed_on_results():
+    """Every streaming entry point surfaces SelectStats on its result."""
+    from repro.core import selection as sel_lib
+
+    g = _pool(25, 200, 12)
+    sel = stream_lib.gradmatch_streaming_array(g, 24, chunk_size=64,
+                                               buffer_size=64)
+    assert isinstance(sel.stats, stream_lib.SelectStats)
+    assert sel.stats.rounds == 24
+    sel2 = stream_lib.gradmatch_streaming(
+        stream_lib.array_chunks(g, 64), 24, buffer_size=64)
+    assert isinstance(sel2.stats, stream_lib.SelectStats)
+    sel3 = sel_lib.select("gradmatch-stream", jax.random.PRNGKey(0),
+                          jnp.asarray(g), k=16)
+    assert isinstance(sel3.stats, stream_lib.SelectStats)
+    # non-streaming strategies carry no stats
+    assert sel_lib.select("random", jax.random.PRNGKey(0),
+                          jnp.asarray(g), k=16).stats is None
+
+
+def test_serve_admission_prefills_cache_zero_passes():
+    """The registry's admission summing pass doubles as the cache fill:
+    a later streaming request bootstraps from the warmed cache and never
+    touches the loader (passes == 0)."""
+    from repro.data.loader import ChunkedPool
+    from repro.serve.registry import PoolRegistry
+
+    g = _pool(26, 384, 16)
+    reg = PoolRegistry()
+    pid = reg.register_chunked(ChunkedPool(g, None, chunk_size=128))
+    entry = reg.get(pid)
+    assert entry.cache is not None and entry.cache.complete == 3
+    sel = stream_lib.gradmatch_streaming(
+        entry.chunk_iter, 32, target=entry.target_sum,
+        cache=entry.cache, row_fetch=entry.row_fetch)
+    assert sel.stats.passes == 0
+    ref = _ref(g, np.asarray(entry.target_sum), 32)
+    np.testing.assert_array_equal(np.asarray(sel.indices),
+                                  np.asarray(ref[0]))
+
+
+def test_unstable_iterator_detected_by_cache():
+    """An iterator whose chunk offsets move between passes is caught at
+    the cache layer instead of looping to the pass budget."""
+    g = _pool(27, 128, 8)
+    state = {"n": 0}
+
+    def unstable():
+        state["n"] += 1
+        cs = 32 if state["n"] == 1 else 48    # offsets shift on pass 2
+        for lo in range(0, 128, cs):
+            yield g[lo:lo + cs], None
+
+    with pytest.raises(RuntimeError, match="unstable"):
+        stream_lib.omp_select_streaming(
+            unstable, jnp.asarray(g.sum(axis=0)), 64, buffer_size=8,
+            chunk_topm=4)
+
+
+def test_refill_non_power_of_two_arena():
+    """Regression: a cache whose row capacity is not a power of two used
+    to crash the cache refill when the candidate bucket rounded past the
+    arena length (fetched/live shape mismatch)."""
+    from repro.core.streaming import ChunkCache
+
+    rng = np.random.default_rng(30)
+    n, d, chunk = 384, 16, 128
+    base = rng.standard_normal((d,)).astype(np.float32)
+    g = np.tile(base, (n, 1)) + 1e-3 * rng.standard_normal(
+        (n, d)).astype(np.float32)          # intervals overlap heavily
+    target = g.sum(axis=0)
+    cache = ChunkCache(3 * 128 * ChunkCache(0, d).bytes_per_row + 47, d)
+    assert cache.cap_rows_budget not in (256, 512)   # non-pow2 capacity
+    out = stream_lib.omp_select_streaming(
+        stream_lib.array_chunks(g, chunk), target, 48, buffer_size=96,
+        cache=cache, row_fetch=stream_lib.array_row_fetch(g))
+    from repro.core.omp import omp_select_dense
+    dense = omp_select_dense(jnp.asarray(g), jnp.asarray(target), k=48)
+    np.testing.assert_array_equal(np.asarray(out.indices),
+                                  np.asarray(dense[0]))
+
+
+def test_repair_annex_overflow_clamped():
+    """Regression: with repair_slots not a multiple of the fetch batch,
+    a repair whose prefetch band exceeded the free annex room used to
+    scatter-drop buffer writes while still marking the rows in-buffer
+    arena-side — rows invisible to both scans, a silent exactness hole.
+    The clamp keeps every admission inside the annex."""
+    rng = np.random.default_rng(31)
+    n, d, k = 512, 24, 64
+    base = rng.standard_normal((d,)).astype(np.float32)
+    g = np.tile(base, (n, 1)) + 1e-3 * rng.standard_normal(
+        (n, d)).astype(np.float32)
+    target = g.sum(axis=0)
+    out = stream_lib.omp_select_streaming(
+        stream_lib.array_chunks(g, 128), target, k, buffer_size=48,
+        repair_slots=200,                    # free room hits 72, 8, ...
+        row_fetch=stream_lib.array_row_fetch(g))
+    from repro.core.omp import omp_select_dense
+    dense = omp_select_dense(jnp.asarray(g), jnp.asarray(target), k=k)
+    np.testing.assert_array_equal(np.asarray(out.indices),
+                                  np.asarray(dense[0]))
