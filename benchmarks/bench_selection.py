@@ -22,6 +22,8 @@ pool-32768 run whose (n, n) similarity is never materialized.
 
 from __future__ import annotations
 
+import time
+
 import jax
 import jax.numpy as jnp
 
@@ -304,9 +306,122 @@ def run_serve(pool=8192, d=512, k=64, batch=32, quick=False) -> list[dict]:
     return rows
 
 
+def run_faults(pool=8192, d=64, k=256, chunk=1024, buffer_size=256,
+               rate=0.2, seed=11, quick=False) -> list[dict]:
+    """Fault-recovery overhead + degradation accounting (DESIGN.md §8).
+
+    Times the streaming solve under seeded transient faults (zero-backoff
+    retries, so the ratio measures re-read work, not sleeps) against the
+    fault-free run and asserts the differential guarantee held
+    (``parity``); also measures a kill/checkpoint/resume cycle and one
+    serve-tier walk down the degradation ladder.  The acceptance target
+    is ``overhead <= 1.5`` at well above a 5% chunk fault rate.
+    """
+    import shutil
+    import tempfile
+
+    import numpy as np
+
+    from repro.core import streaming as stream_lib
+    from repro.resilience import (FaultPlan, FaultyChunkIterator,
+                                  RetryPolicy, faulty_row_fetch)
+
+    if quick:
+        pool, k = 2048, 64
+    rows = []
+    record = make_recorder("selection_faults", rows)
+    pol = RetryPolicy(max_retries=8, backoff_s=0.0, sleep=lambda s: None)
+    g = np.asarray(jax.random.normal(jax.random.PRNGKey(pool), (pool, d)),
+                   np.float32)
+    target = jnp.sum(jnp.asarray(g), axis=0)
+    chunks = stream_lib.array_chunks(g, chunk)
+    fetch = stream_lib.array_row_fetch(g)
+    plan = FaultPlan(seed=seed, transient_rate=rate, row_transient_rate=rate)
+
+    def solve(ci, rf):
+        out = stream_lib.omp_select_streaming(
+            ci, target, k, buffer_size=buffer_size, row_fetch=rf,
+            retry=pol)
+        jax.block_until_ready(out.weights)
+        return out
+
+    ref = solve(chunks, fetch)                       # warm + reference
+    t_clean = time_fn(lambda: solve(chunks, fetch).weights,
+                      warmup=0, iters=3)
+    fci = FaultyChunkIterator(chunks, plan)
+    frf = faulty_row_fetch(fetch, plan)
+    out = solve(fci, frf)                            # stats + parity run
+    parity = bool(jnp.all(out.indices == ref.indices)) and bool(
+        jnp.all(out.mask == ref.mask))
+    t_fault = time_fn(
+        lambda: solve(FaultyChunkIterator(chunks, plan),
+                      faulty_row_fetch(fetch, plan)).weights,
+        warmup=0, iters=3)
+    record(strategy="stream-faulted", pool=pool, k=k,
+           ms=round(t_fault * 1e3, 2), ms_clean=round(t_clean * 1e3, 2),
+           overhead=round(t_fault / max(t_clean, 1e-9), 3),
+           fault_rate=rate,
+           injected=sum(fci.injected.values()) + sum(frf.injected.values()),
+           retries=out.stats.retries, quarantined=out.stats.quarantined,
+           parity=parity)
+
+    # kill mid-solve -> resume from checkpoint: the recovery the serve
+    # tier's "resumed" rung pays for.
+    n2, k2 = pool // 4, max(k // 4, 16)
+    g2 = g[:n2]
+    t2 = jnp.sum(jnp.asarray(g2), axis=0)
+    c2 = stream_lib.array_chunks(g2, chunk // 4)
+    ref2 = stream_lib.omp_select_streaming(c2, t2, k2, buffer_size=64,
+                                           cache_bytes=0, retry=pol)
+    td = tempfile.mkdtemp(prefix="bench-faults-")
+    try:
+        dying = FaultyChunkIterator(
+            c2, FaultPlan(seed=seed,
+                          die_after_chunks=3 * (n2 // (chunk // 4))))
+        try:
+            stream_lib.omp_select_streaming(
+                dying, t2, k2, buffer_size=64, cache_bytes=0, retry=pol,
+                checkpoint_dir=td, checkpoint_every=1)
+            killed = False
+        except Exception:
+            killed = True
+        t0 = time.perf_counter()
+        res = stream_lib.omp_select_streaming(
+            c2, t2, k2, buffer_size=64, cache_bytes=0, retry=pol,
+            checkpoint_dir=td, checkpoint_every=1)
+        t_resume = time.perf_counter() - t0
+        record(strategy="stream-kill-resume", pool=n2, k=k2,
+               ms=round(t_resume * 1e3, 2), killed=killed,
+               resumes=res.stats.resumes,
+               parity=bool(jnp.all(res.indices == ref2.indices)))
+    finally:
+        shutil.rmtree(td, ignore_errors=True)
+
+    # serve tier: poisoned pool walks the ladder to the stochastic rung.
+    from repro.data.loader import ChunkedPool
+    from repro.serve import SelectionService
+
+    svc = SelectionService(max_batch=8, retry_policy=pol)
+    dead = FaultyChunkIterator(
+        stream_lib.chunked_pool_iter(ChunkedPool(g2, chunk_size=chunk // 4)),
+        FaultPlan(seed=seed, die_after_chunks=n2 // (chunk // 4) + 1))
+    pid = svc.register_chunked_pool(dead)
+    svc.scheduler.stream_buffer = 16
+    t0 = time.perf_counter()
+    ticket = svc.submit(pid, k=k2)
+    svc.drain()
+    record(strategy="serve-degrade", pool=n2, k=k2,
+           ms=round((time.perf_counter() - t0) * 1e3, 2),
+           status=ticket.status, degradation=ticket.degradation,
+           **{f"served_{lvl}": cnt for lvl, cnt in
+              svc.scheduler.stats()["degraded_served"].items()})
+    return rows
+
+
 def main(quick=False) -> list[dict]:
     return (run(quick=quick) + run_streaming(quick=quick)
-            + run_greedy(quick=quick) + run_serve(quick=quick))
+            + run_greedy(quick=quick) + run_serve(quick=quick)
+            + run_faults(quick=quick))
 
 
 if __name__ == "__main__":

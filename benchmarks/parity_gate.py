@@ -24,6 +24,10 @@ Checks, all against artifacts committed in the repo:
 4. **Greedy perf regression**: same machine-independent >2x ratio rule as
    (2), applied to the craig-lazy/craig time pair at the largest
    committed pool whose dense greedy is still CI-affordable.
+5. **Fault recovery** (DESIGN.md §8): under seeded transient faults at
+   15% the streaming solve must stay bit-identical to fault-free within
+   1.5x its wall-clock, and a solve killed mid-stream must resume from
+   its checkpoint to the same selection.
 
 Exit code 0 = gate passed.  ``python -m benchmarks.parity_gate``
 """
@@ -266,6 +270,87 @@ def check_serve_smoke() -> bool:
     return bool(report["ok"])
 
 
+def check_fault_recovery(n=4096, d=64, k=128, chunk=512, rate=0.15,
+                         seed=11, overhead_budget=1.5) -> bool:
+    """Fault-recovery gate (DESIGN.md §8): under seeded transient faults
+    at ``rate`` (3x the 5% acceptance floor) the streaming solve must
+    select bit-identically to the fault-free run within
+    ``overhead_budget`` x its wall-clock (retries are zero-backoff, so
+    the ratio measures re-read work, not sleeps); and a solve killed
+    mid-stream must resume from its checkpoint to the same selection."""
+    import shutil
+    import tempfile
+
+    from repro.core import streaming as stream_lib
+    from repro.resilience import (FaultPlan, FaultyChunkIterator,
+                                  RetryPolicy, faulty_row_fetch)
+
+    g = np.asarray(jax.random.normal(jax.random.PRNGKey(17), (n, d)),
+                   np.float32)
+    target = jnp.sum(jnp.asarray(g), axis=0)
+    chunks = stream_lib.array_chunks(g, chunk)
+    fetch = stream_lib.array_row_fetch(g)
+    pol = RetryPolicy(max_retries=8, backoff_s=0.0, sleep=lambda s: None)
+    plan = FaultPlan(seed=seed, transient_rate=rate, row_transient_rate=rate)
+
+    def solve(ci, rf, **kw):
+        out = stream_lib.omp_select_streaming(
+            ci, target, k, buffer_size=256, row_fetch=rf, retry=pol, **kw)
+        jax.block_until_ready(out.weights)
+        return out
+
+    ref = solve(chunks, fetch)                       # warm + reference
+    t_clean = time_fn(lambda: solve(chunks, fetch).weights,
+                      warmup=0, iters=3)
+    out = solve(FaultyChunkIterator(chunks, plan),
+                faulty_row_fetch(fetch, plan))
+    parity = bool(jnp.all(out.indices == ref.indices)) and bool(
+        jnp.all(out.mask == ref.mask)) and bool(
+        jnp.all(out.weights == ref.weights))
+    t_fault = time_fn(
+        lambda: solve(FaultyChunkIterator(chunks, plan),
+                      faulty_row_fetch(fetch, plan)).weights,
+        warmup=0, iters=3)
+    overhead = t_fault / max(t_clean, 1e-9)
+
+    # Kill/resume on the cacheless configuration: every commit burst
+    # re-pays a loader pass there, so death at 3 passes lands mid-solve
+    # (the cached solve finishes in one pass and would never be killed).
+    n2, k2 = n // 4, k // 4
+    g2 = g[:n2]
+    t2 = jnp.sum(jnp.asarray(g2), axis=0)
+    c2 = stream_lib.array_chunks(g2, chunk // 4)
+
+    def solve2(ci, **kw):
+        return stream_lib.omp_select_streaming(
+            ci, t2, k2, buffer_size=64, cache_bytes=0, retry=pol, **kw)
+
+    ref2 = solve2(c2)
+    td = tempfile.mkdtemp(prefix="gate-faults-")
+    try:
+        dying = FaultyChunkIterator(
+            c2, FaultPlan(seed=seed, die_after_chunks=3 * (n2 // (chunk
+                                                                  // 4))))
+        try:
+            solve2(dying, checkpoint_dir=td, checkpoint_every=1)
+            killed = False
+        except Exception:
+            killed = True
+        res = solve2(c2, checkpoint_dir=td, checkpoint_every=1)
+        resume_ok = (killed and res.stats.resumes == 1
+                     and bool(jnp.all(res.indices == ref2.indices))
+                     and bool(jnp.all(res.weights == ref2.weights)))
+    finally:
+        shutil.rmtree(td, ignore_errors=True)
+
+    ok = parity and overhead <= overhead_budget and resume_ok
+    print(f"parity_gate,check=fault-recovery,pool={n},k={k},rate={rate},"
+          f"parity={parity},retries={out.stats.retries},"
+          f"overhead={overhead:.2f},budget={overhead_budget},"
+          f"resume_ok={resume_ok},ok={ok}", flush=True)
+    return ok
+
+
 def main() -> int:
     ok = check_streaming_parity()
     ok &= check_streaming_overhead()
@@ -273,6 +358,7 @@ def main() -> int:
     ok &= check_greedy_parity()
     ok &= check_greedy_regression()
     ok &= check_serve_smoke()
+    ok &= check_fault_recovery()
     print(f"parity_gate,{'PASS' if ok else 'FAIL'}", flush=True)
     return 0 if ok else 1
 

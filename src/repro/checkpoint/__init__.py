@@ -1,9 +1,13 @@
 from repro.checkpoint.checkpoint import (CheckpointManager, load_checkpoint,
                                          restore_sharded, save_checkpoint)
+from repro.checkpoint.solver_state import (load_solver_state,
+                                           save_solver_state)
 
 __all__ = [
     "CheckpointManager",
     "load_checkpoint",
+    "load_solver_state",
     "restore_sharded",
     "save_checkpoint",
+    "save_solver_state",
 ]

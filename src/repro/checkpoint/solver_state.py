@@ -1,0 +1,38 @@
+"""Mid-solve checkpoints for the streaming selection engine.
+
+The training checkpointer (``checkpoint.py``) already has everything a
+killed process needs — atomic tmp+rename, npz + JSON manifest, bf16
+stored as uint16 views, keep-K GC.  This module is the thin contract the
+streaming solver (``core/streaming.py``) uses on top of it: a snapshot of
+the commit-loop state (Gram/NNLS prefix, buffer, compressed-cache
+manifest, pass/round counters) is just a nested dict of arrays, saved
+every ``checkpoint_every`` committed rounds and restored by the next
+solve over the same pool so a killed multi-round solve resumes
+bit-exactly (tests/test_resilience.py kills a solve mid-stream and
+asserts the resumed selection equals the fault-free run's).
+
+``load_solver_state`` returns ``None`` when there is nothing to resume —
+a fresh solve with ``checkpoint_dir`` set must not fail just because it
+is the first one.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+from repro.checkpoint.checkpoint import (latest_step, load_checkpoint,
+                                         save_checkpoint)
+
+
+def save_solver_state(directory: str, step: int, tree: Any,
+                      keep: int = 2) -> str:
+    """Atomically persist one solver snapshot; keeps the last ``keep``."""
+    return save_checkpoint(directory, step, tree, keep=keep)
+
+
+def load_solver_state(directory: str) -> Optional[dict]:
+    """Latest solver snapshot under ``directory``, or ``None`` if absent."""
+    step = latest_step(directory)
+    if step is None:
+        return None
+    return load_checkpoint(directory, step)

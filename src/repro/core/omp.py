@@ -564,6 +564,27 @@ def session_result(sess: OMPAnytimeState
     return sess.indices, sess.weights, sess.mask, sess.err
 
 
+def session_prefix_result(sess: OMPAnytimeState, k: int
+                          ) -> tuple[jax.Array, jax.Array, jax.Array,
+                                     jax.Array]:
+    """First-``k`` slice of a session: the serve tier's degraded answer.
+
+    The *indices and mask* are certified — the anytime prefix property
+    means ``sess.indices[:k]`` is exactly what a one-shot ``k`` solve
+    picks.  The *weights* are not: the NNLS weights at budget ``sess.k``
+    restricted to the prefix differ from a fresh ``k``-round solve's, so
+    they are returned as-is (the caller renormalizes) and the answer must
+    be labelled degraded (``anytime-prefix``), never passed off as a full
+    solve.  ``k`` may not exceed the session's solved budget.
+    """
+    k = int(k)
+    if k > sess.k:
+        raise ValueError(
+            f"session has only {sess.k} solved rounds, asked prefix {k} "
+            "(extend the session instead)")
+    return (sess.indices[:k], sess.weights[:k], sess.mask[:k], sess.err)
+
+
 # ---------------------------------------------------------------------------
 # batched multi-target OMP: one pool scan serves B concurrent targets
 # ---------------------------------------------------------------------------

@@ -77,8 +77,10 @@ def select(
     ``chunk_size`` — the same subset as ``"gradmatch"`` with pooled
     (non-per-class) OMP, at ``O(chunk + stream_buffer·d +
     stream_cache_bytes)`` peak pool memory (the compressed chunk cache
-    is what lets the engine commit many rounds per loader pass; set
-    ``stream_cache_bytes=0`` to disable it).  The returned result
+    is what lets the engine commit many rounds per loader pass;
+    ``stream_cache_bytes`` must be positive here — running cacheless is
+    only available on ``streaming.omp_select_streaming`` directly).  The
+    returned result
     carries the engine's ``SelectStats``.  Callers with a truly
     out-of-core pool should use ``streaming.gradmatch_streaming``
     directly with a chunk factory (the trainer does).
@@ -99,6 +101,18 @@ def select(
         return gm_lib.gradmatch(proxies, k, target=val_target, lam=lam,
                                 eps=eps, method=omp_method)
     if strategy == "gradmatch-stream":
+        if stream_cache_bytes <= 0:
+            # The engine itself accepts cache_bytes=0 (certified, but
+            # every commit re-pays a loader pass); through this in-memory
+            # convenience path that trade is never what the caller wants —
+            # it is always a typo or a unit slip (bytes, not MB/rows).
+            raise ValueError(
+                f"stream_cache_bytes must be > 0, got "
+                f"{stream_cache_bytes}: the compressed chunk cache is "
+                "what lets gradmatch-stream commit rounds without "
+                "re-reading the pool.  Pass bytes (e.g. 1 << 24); to "
+                "deliberately run cacheless use "
+                "streaming.omp_select_streaming(cache_bytes=0) directly.")
         return stream_lib.gradmatch_streaming_array(
             proxies, k, target=val_target, lam=lam, eps=eps,
             chunk_size=chunk_size, buffer_size=stream_buffer,

@@ -73,9 +73,13 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from repro.checkpoint.solver_state import (load_solver_state,
+                                           save_solver_state)
 from repro.core.gradmatch import SelectionResult, _normalize
 from repro.core.omp import _nnls_active_cached
 from repro.kernels import ops
+from repro.resilience.faults import CorruptChunkError
+from repro.resilience.recovery import RetryPolicy, with_retries
 
 _NEG_INF = jnp.float32(-jnp.inf)
 _BIG_ID = jnp.int32(2**31 - 1)
@@ -153,36 +157,48 @@ def chunked_pool_iter(pool, valid=None) -> Callable[[], Iterator]:
 
 
 def streaming_target(pool_iter: Callable[[], Iterator],
-                     cache: "ChunkCache | None" = None):
+                     cache: "ChunkCache | None" = None,
+                     retry: "RetryPolicy | None" = None):
     """One pass: ``(sum of valid rows, total row count)`` — eq. (2) target.
 
     When a ``cache`` is given the same pass also warms the compressed
     chunk cache (the serve registry's admission pass doubles as the cache
-    fill, so the first request's rescans already hit memory).
+    fill, so the first request's rescans already hit memory).  With a
+    ``retry`` policy, transient iterator faults restart the pass (the
+    summing accumulators are pass-local and ``cache.offer`` is idempotent
+    for resident chunks, so a restart is exact).
     """
-    total = None
-    n = 0
-    idx = 0
-    for chunk, v in pool_iter():
-        c = jnp.asarray(chunk, jnp.float32)
-        if v is not None:
-            c = c * jnp.asarray(v)[:, None].astype(jnp.float32)
-        s = jnp.sum(c, axis=0)
-        total = s if total is None else total + s
-        if cache is not None:
-            cpad = _bucket(chunk.shape[0])
-            ch = jnp.asarray(chunk, jnp.float32)
-            if cpad != chunk.shape[0]:
-                ch = jnp.pad(ch, ((0, cpad - chunk.shape[0]), (0, 0)))
-            ok = jnp.arange(cpad) < chunk.shape[0]
+
+    def scan():
+        total = None
+        n = 0
+        idx = 0
+        for chunk, v in pool_iter():
+            c = jnp.asarray(chunk, jnp.float32)
             if v is not None:
-                ok = ok & jnp.pad(jnp.asarray(v, bool),
-                                  (0, cpad - chunk.shape[0]))
-            gids = jnp.where(jnp.arange(cpad) < chunk.shape[0],
-                             n + jnp.arange(cpad, dtype=jnp.int32), -1)
-            cache.offer(idx, n, chunk.shape[0], ch, ok, gids)
-        n += chunk.shape[0]
-        idx += 1
+                c = c * jnp.asarray(v)[:, None].astype(jnp.float32)
+            s = jnp.sum(c, axis=0)
+            total = s if total is None else total + s
+            if cache is not None:
+                cpad = _bucket(chunk.shape[0])
+                ch = jnp.asarray(chunk, jnp.float32)
+                if cpad != chunk.shape[0]:
+                    ch = jnp.pad(ch, ((0, cpad - chunk.shape[0]), (0, 0)))
+                ok = jnp.arange(cpad) < chunk.shape[0]
+                if v is not None:
+                    ok = ok & jnp.pad(jnp.asarray(v, bool),
+                                      (0, cpad - chunk.shape[0]))
+                gids = jnp.where(jnp.arange(cpad) < chunk.shape[0],
+                                 n + jnp.arange(cpad, dtype=jnp.int32), -1)
+                cache.offer(idx, n, chunk.shape[0], ch, ok, gids)
+            n += chunk.shape[0]
+            idx += 1
+        return total, n, idx
+
+    if retry is None:
+        total, n, idx = scan()
+    else:
+        total, n, idx = with_retries(scan, retry)
     if total is None:
         raise ValueError("empty pool iterator")
     if cache is not None and cache.covers(idx):
@@ -342,6 +358,71 @@ class ChunkCache:
 
     def covers(self, num_chunks: int) -> bool:
         return len(self.entries) == num_chunks and num_chunks > 0
+
+    def quarantine(self, pos) -> None:
+        """Mask arena rows out of every certification scan (the engine's
+        fail-closed corruption response — see DESIGN.md §8).  Positions at
+        or past ``cap_rows`` scatter-drop.  The mask persists for the
+        cache's lifetime: a shared serve cache keeps refusing rows whose
+        backing data went bad, across requests."""
+        if self.ok is None:
+            return
+        p = jnp.asarray(np.asarray(pos, np.int64), jnp.int32)
+        self.ok = self.ok.at[p].set(False, mode="drop")
+
+    def state_dict(self) -> dict:
+        """Checkpointable snapshot (streaming checkpoint/resume).  The
+        entry table is stored in LRU order so a restore reproduces the
+        eviction behavior — and therefore the solve — exactly."""
+        st = {"cache_bytes": np.int64(self.cache_bytes),
+              "d": np.int64(self.d),
+              "slot_rows": np.int64(self.slot_rows),
+              "cap_slots": np.int64(self.cap_slots),
+              "complete": np.int64(self.complete),
+              "insertions": np.int64(self.insertions),
+              "evictions": np.int64(self.evictions),
+              "ent_cidx": np.asarray(self._lru, np.int64),
+              "ent_slot": np.asarray(
+                  [self.entries[c][0] for c in self._lru], np.int64),
+              "ent_off": np.asarray(
+                  [self.entries[c][1] for c in self._lru], np.int64),
+              "ent_len": np.asarray(
+                  [self.entries[c][2] for c in self._lru], np.int64)}
+        if self.rows is not None:
+            st.update(rows=self.rows, norms=self.norms, errn=self.errn,
+                      gids=self.gids, ok=self.ok)
+        return st
+
+    def load_state(self, st: dict) -> None:
+        if int(st["d"]) != self.d:
+            raise ValueError(
+                f"cache checkpoint is for d={int(st['d'])}, "
+                f"this cache has d={self.d}")
+        self.cache_bytes = int(st["cache_bytes"])
+        self.cap_rows_budget = max(self.cache_bytes // self.bytes_per_row,
+                                   0)
+        self.slot_rows = int(st["slot_rows"])
+        self.cap_slots = int(st["cap_slots"])
+        self.complete = int(st["complete"])
+        self.insertions = int(st["insertions"])
+        self.evictions = int(st["evictions"])
+        self.entries = {}
+        self._lru = []
+        for c, s, o, ln in zip(np.asarray(st["ent_cidx"]).tolist(),
+                               np.asarray(st["ent_slot"]).tolist(),
+                               np.asarray(st["ent_off"]).tolist(),
+                               np.asarray(st["ent_len"]).tolist()):
+            self.entries[int(c)] = (int(s), int(o), int(ln))
+            self._lru.append(int(c))
+        if "rows" in st:
+            self.rows = jnp.asarray(st["rows"])
+            self.norms = jnp.asarray(st["norms"])
+            self.errn = jnp.asarray(st["errn"])
+            self.gids = jnp.asarray(st["gids"])
+            self.ok = jnp.asarray(st["ok"])
+        else:
+            self.rows = self.norms = self.errn = None
+            self.gids = self.ok = None
 
     def stats(self) -> dict:
         return {"resident_chunks": len(self.entries),
@@ -553,6 +634,19 @@ def _scatter_mask(mask, pos):
     return mask.at[pos].set(True, mode="drop")
 
 
+@jax.jit
+def _verify_norms(ch, ok, ref):
+    """Per-row corruption check of a re-read chunk against the cache's
+    f32 exact-norm sidecar (recorded at first contact).  The tolerance
+    covers f32 reassociation between the two norm computations; real
+    corruption (a flipped exponent/sign-magnitude bit, truncation) moves
+    the norm orders of magnitude past it.  A norm-preserving corruption
+    (pure sign flips) is not detectable this way — DESIGN.md §8 scopes
+    the fault model."""
+    nn = jnp.where(ok, jnp.sqrt(jnp.sum(ch * ch, axis=1)), 0.0)
+    return ok & (jnp.abs(nn - ref) > 1e-4 * (ref + 1e-6))
+
+
 @functools.partial(
     jax.jit, static_argnames=("p", "nnls_iters", "absolute", "has_arena",
                               "fmax"))
@@ -720,6 +814,11 @@ class SelectStats:
     fetched_rows: int = 0       # exact rows fetched by id (repair+refill)
     cache_hits: int = 0         # certification chunk lookups in the arena
     cache_misses: int = 0       # ... that had to use the sketch bound
+    retries: int = 0            # transient faults retried (chunks + rows)
+    quarantined: int = 0        # rows masked out after persistent
+                                # corruption (never silently selected)
+    checkpoints: int = 0        # mid-solve snapshots written
+    resumes: int = 0            # solves resumed from a checkpoint
 
     @property
     def cache_hit_rate(self) -> float:
@@ -727,11 +826,17 @@ class SelectStats:
         return self.cache_hits / tot if tot else 0.0
 
     def summary(self) -> str:
-        return (f"passes={self.passes} rounds={self.rounds} "
-                f"certified_rounds={self.certified_rounds} "
-                f"refills={self.refills} repairs={self.repairs} "
-                f"fetched_rows={self.fetched_rows} "
-                f"cache_hit_rate={self.cache_hit_rate:.2f}")
+        s = (f"passes={self.passes} rounds={self.rounds} "
+             f"certified_rounds={self.certified_rounds} "
+             f"refills={self.refills} repairs={self.repairs} "
+             f"fetched_rows={self.fetched_rows} "
+             f"cache_hit_rate={self.cache_hit_rate:.2f}")
+        if self.retries or self.quarantined:
+            s += (f" retries={self.retries} "
+                  f"quarantined={self.quarantined}")
+        if self.resumes:
+            s += f" resumes={self.resumes}"
+        return s
 
 
 # Backwards-compatible alias (PR 2 name).
@@ -749,8 +854,9 @@ class StreamingPassBudgetError(RuntimeError):
         self.cap = cap
         self.stats = stats
         super().__init__(
-            f"streaming OMP exceeded {cap} passes ({stats.summary()}) — "
-            "is the pool iterator stable across passes?  An adversarial "
+            f"streaming OMP exceeded its pass budget (cap={cap}). "
+            f"Solver state at failure: {stats.summary()}. "
+            "Is the pool iterator stable across passes?  An adversarial "
             "pool that never certifies needs max_passes >= k + 2.")
 
 
@@ -779,6 +885,10 @@ def omp_select_streaming(
     cache_bytes: int = DEFAULT_CACHE_BYTES,  # budget when cache is None
     row_fetch: Optional[Callable] = None,    # ids -> exact f32 rows
     repair_slots: int = 512,             # annex width for exact-row repairs
+    retry: Optional[RetryPolicy] = None,     # transient-fault recovery
+    checkpoint_dir: Optional[str] = None,    # mid-solve snapshots
+    checkpoint_every: int = 8,           # committed rounds between saves
+    resume: bool = True,                 # pick up a prior checkpoint
 ) -> StreamingOMPResult:
     """OMP over a chunked pool; exact parity with ``omp_select``.
 
@@ -793,6 +903,19 @@ def omp_select_streaming(
     exact-row gather capability (``array_row_fetch`` for array pools);
     without it the repair and cache-refill tiers are skipped and every
     certification failure costs a loader pass, which is still exact.
+
+    Recovery (DESIGN.md §8): transient loader/fetch faults
+    (``resilience.TransientFault``) are retried per ``retry`` (default
+    ``RetryPolicy()``) at whole-pass / fetch granularity — a restarted
+    pass rebuilds its accumulators from scratch, so recovery never
+    changes the selection.  Re-read chunks and re-fetched rows are
+    verified against the cache's f32 exact-norm sidecars; content that
+    still disagrees after the retry budget is *quarantined* — masked out
+    of the certificate ladder and never silently selected.  With
+    ``checkpoint_dir``, the commit-loop state is snapshotted every
+    ``checkpoint_every`` committed rounds via ``repro.checkpoint`` and a
+    later call with the same arguments resumes bit-exactly
+    (``resume=False`` ignores an existing checkpoint).
     """
     target = jnp.asarray(target, jnp.float32)
     d = target.shape[0]
@@ -805,6 +928,8 @@ def omp_select_streaming(
     scorer = score_chunk_fn if score_chunk_fn is not None else _score_chunk
     if cache is None:
         cache = ChunkCache(int(cache_bytes), d)
+    if retry is None:
+        retry = RetryPolicy()
     acc = jnp.float32(_acc_margin(d))
 
     indices = jnp.full((k,), -1, jnp.int32)
@@ -832,9 +957,36 @@ def omp_select_streaming(
     chunk_meta: list[tuple[int, int]] = []   # (offset, length) per chunk
     ar_taken = ar_inbuf = None
     num_chunks = 0
+    quarantined: set[int] = set()   # global ids failed-closed (corruption)
+    corrupt_seen: dict[int, int] = {}   # chunk idx -> mismatched reads
+    last_ckpt = 0
+
+    def _note_retry(attempt, exc) -> None:
+        stats.retries += 1
 
     def arena_ready() -> bool:
         return cache.cap_rows > 0 and len(cache.entries) > 0
+
+    def _quarantine(gids_np) -> None:
+        """Fail-closed response to persistent corruption: drop the rows
+        from every candidate source (arena validity, buffer liveness, and
+        — via the ``quarantined`` set — future loader passes).  Rows
+        already committed to the selection were read clean when picked
+        and stay; quarantine governs candidacy, not history."""
+        nonlocal bdead
+        fresh = [int(g) for g in np.atleast_1d(np.asarray(gids_np))
+                 if g >= 0 and int(g) not in quarantined]
+        if not fresh:
+            return
+        quarantined.update(fresh)
+        stats.quarantined = len(quarantined)
+        if arena_ready() and chunk_meta:
+            cache.quarantine(gids_to_pos(np.asarray(fresh, np.int64)))
+        if bi is not None:
+            hit = jnp.zeros_like(bdead)
+            for g in fresh:
+                hit = hit | (bi == g)
+            bdead = bdead | hit
 
     def sync_arena_masks() -> None:
         """(Re)size the per-solve arena masks to the arena capacity."""
@@ -862,11 +1014,20 @@ def omp_select_streaming(
 
     def loader_pass() -> bool:
         """Full loader scan: refresh buffer + cache + sketch state.
-        Returns False on an empty pool."""
-        nonlocal bi, br, bdead, annex_cursor, r0, chunk_thresh
-        nonlocal chunk_norm, chunk_cached, num_chunks
+        Returns False on an empty pool.  Transient iterator faults
+        restart the whole scan under the retry policy — the merge
+        accumulators below are scan-local, ``chunk_meta`` appends are
+        guarded, ``chunk_norm_host`` only extends after a completed scan
+        and ``cache.offer`` is idempotent for resident chunks, so a
+        restart recomputes the identical refresh (``stats.chunks`` may
+        over-count across aborted scans; passes count completed scans)."""
         if stats.passes >= cap:
             raise StreamingPassBudgetError(cap, stats)
+        return with_retries(_scan_pass, retry, on_retry=_note_retry)
+
+    def _scan_pass() -> bool:
+        nonlocal bi, br, bdead, annex_cursor, r0, chunk_thresh
+        nonlocal chunk_norm, chunk_cached, num_chunks
         mv = jnp.full((big_m,), -jnp.inf, jnp.float32)
         mi = jnp.full((big_m,), -1, jnp.int32)
         mr = jnp.zeros((big_m, d), jnp.float32)
@@ -888,7 +1049,36 @@ def omp_select_streaming(
             if cvalid is not None:
                 ok = ok & jnp.pad(jnp.asarray(cvalid, bool),
                                   (0, cpad - c))
+            if quarantined:
+                ql = [g - offset for g in quarantined
+                      if offset <= g < offset + c]
+                if ql:
+                    ok = ok & ~jnp.zeros((cpad,), bool).at[
+                        jnp.asarray(ql, jnp.int32)].set(True)
             gids = jnp.where(pos_in < c, offset + pos_in, -1)
+            if cidx >= len(chunk_meta):
+                chunk_meta.append((offset, c))
+            slot = cache.slot_of(cidx)
+            if slot is not None:
+                # Re-read of a resident chunk: verify the content against
+                # the exact-norm sidecar recorded at first contact.  A
+                # mismatch is first treated as a transient misread (the
+                # scan restarts); a chunk that keeps disagreeing past the
+                # retry budget has its mismatching rows quarantined and
+                # the scan proceeds without them.
+                lo = slot * cache.slot_rows
+                bad = np.asarray(_verify_norms(
+                    ch, ok, cache.norms[lo:lo + cpad]))
+                if bad.any():
+                    seen = corrupt_seen.get(cidx, 0) + 1
+                    corrupt_seen[cidx] = seen
+                    if seen <= retry.max_retries:
+                        raise CorruptChunkError(
+                            f"chunk {cidx} disagrees with its exact-norm "
+                            f"sidecar on {int(bad.sum())} row(s) "
+                            f"(mismatched read {seen})")
+                    _quarantine(offset + np.flatnonzero(bad))
+                    ok = ok & jnp.asarray(~bad)
             m_eff = min(m_cfg, cpad, big_m)
             need_n = cidx >= len(chunk_norm_host)
             vals, ids, rws, rok, cmax, cthresh = scorer(
@@ -898,8 +1088,6 @@ def omp_select_streaming(
                                           rok, size=big_m)
             if need_n:
                 norms_new.append(cmax)
-            if cidx >= len(chunk_meta):
-                chunk_meta.append((offset, c))
             cache.offer(cidx, offset, c, ch, ok, gids)
             threshs.append(cthresh)
             offset += c
@@ -960,9 +1148,7 @@ def omp_select_streaming(
         # round past gids' length when cap_rows is not a power of two.
         fb = min(_bucket(max(n_cand, 1)), cand_cap)
         ids_np = np.asarray(gids[:fb])
-        live = ids_np >= 0
-        fetched = np.zeros((fb, d), np.float32)
-        fetched[live] = np.asarray(row_fetch(ids_np[live]), np.float32)
+        fetched, live = checked_fetch(ids_np, np.asarray(pos[:fb]))
         f_ids = jnp.asarray(np.where(live, ids_np, -1))
         mv, mi, mr, mdead, inbuf_new = _refresh_merge(
             jnp.asarray(fetched), f_ids, f_ids >= 0, br, bi, bdead,
@@ -983,6 +1169,55 @@ def omp_select_streaming(
         return True
 
     chunk_off_d = slot_lo_d = None    # device-side chunk map (pick_pos)
+
+    def checked_fetch(ids_np, pos_np):
+        """Exact-row fetch with transient retry + corruption detection.
+
+        Fetched rows whose arena position holds an f32 exact-norm sidecar
+        must reproduce it (the sidecar was computed from the row at first
+        contact; the fetch contract is byte-identical f32 rows).  Rows
+        that disagree are re-fetched under the retry budget; persistent
+        disagreement quarantines them — returned ``live`` drops them, so
+        a corrupted row is never admitted to the buffer.  Entries with
+        id -1 are dead padding and fetch nothing.
+        """
+        ids_np = np.asarray(ids_np, np.int64)
+        pos_np = np.asarray(pos_np, np.int64)
+        live = ids_np >= 0
+        out = np.zeros((len(ids_np), d), np.float32)
+        if not live.any():
+            return out, live
+        todo = live.copy()
+        misreads = 0
+        while True:
+            sel = np.flatnonzero(todo)
+            rows_f = with_retries(
+                lambda: np.asarray(row_fetch(ids_np[sel]), np.float32),
+                retry, on_retry=_note_retry)
+            out[sel] = rows_f
+            if not arena_ready():
+                break
+            have = pos_np[sel] < cache.cap_rows
+            if not have.any():
+                break
+            ref = np.asarray(cache.norms[jnp.asarray(
+                np.clip(pos_np[sel], 0, cache.cap_rows - 1), jnp.int32)])
+            r64 = rows_f.astype(np.float64)
+            nf = np.sqrt(np.einsum("ij,ij->i", r64, r64))
+            bad = have & (np.abs(nf - ref) > 1e-4 * (ref + 1e-6))
+            if not bad.any():
+                break
+            misreads += 1
+            if misreads > retry.max_retries:
+                _quarantine(ids_np[sel[bad]])
+                live[sel[bad]] = False
+                out[sel[bad]] = 0.0
+                break
+            _note_retry(misreads, None)
+            retry.sleep(retry.delay(misreads - 1))
+            todo = np.zeros_like(todo)
+            todo[sel[bad]] = True
+        return out, live
 
     def gids_to_pos(ids_np: np.ndarray) -> np.ndarray:
         """Vectorized host map: global ids -> arena rows (sentinel
@@ -1023,7 +1258,107 @@ def omp_select_streaming(
         chunk_off_d = jnp.asarray(off)
         slot_lo_d = jnp.asarray(slo)
 
-    if (cache.complete > 0 and cache.covers(cache.complete)
+    def _capture_tree() -> dict:
+        """Snapshot everything the commit loop needs to resume bit-exactly:
+        solver prefix state (Gram/NNLS buffers, residual), the candidate
+        buffer + annex, sketch state, the compressed-cache manifest and
+        arena, per-solve arena masks, host bookkeeping and stats."""
+        tree = {
+            "cfg": {"k": np.int64(k), "d": np.int64(d),
+                    "big_m": np.int64(big_m), "annex": np.int64(annex),
+                    "block": np.int64(block),
+                    "absolute": np.int64(absolute),
+                    "nnls_iters": np.int64(nnls_iters),
+                    "lam": np.float64(lam), "eps": np.float64(eps)},
+            "solver": {"t": np.int64(t), "err": np.float64(err),
+                       "t_first": np.int64(t_first),
+                       "need_refresh": np.int64(need_refresh),
+                       "annex_cursor": np.int64(annex_cursor),
+                       "num_chunks": np.int64(num_chunks),
+                       "indices": indices, "mask": mask,
+                       "weights": weights, "rows": rows, "gram": gram,
+                       "absrow": absrow, "tcorr": tcorr,
+                       "residual": residual, "r0": r0,
+                       "bi": bi, "br": br, "bdead": bdead,
+                       "chunk_thresh": chunk_thresh,
+                       "chunk_norm": chunk_norm,
+                       "chunk_cached": chunk_cached},
+            "host": {"chunk_off": np.asarray(
+                         [mm[0] for mm in chunk_meta], np.int64),
+                     "chunk_len": np.asarray(
+                         [mm[1] for mm in chunk_meta], np.int64),
+                     "chunk_norm_host": np.asarray(chunk_norm_host,
+                                                   np.float64),
+                     "quarantined": np.asarray(sorted(quarantined),
+                                               np.int64)},
+            "stats": {kk: np.int64(vv) for kk, vv in vars(stats).items()},
+            "arena": cache.state_dict(),
+        }
+        if ar_taken is not None:
+            tree["masks"] = {"ar_taken": ar_taken, "ar_inbuf": ar_inbuf}
+        return tree
+
+    need_refresh = True
+    t_first = -1
+    resumed = False
+    if checkpoint_dir is not None and resume:
+        _tree = load_solver_state(checkpoint_dir)
+        if _tree is not None:
+            cfg = _tree["cfg"]
+            want = {"k": k, "d": d, "big_m": big_m, "annex": annex,
+                    "block": int(block), "absolute": int(absolute),
+                    "nnls_iters": int(nnls_iters)}
+            got = {kk: int(cfg[kk]) for kk in want}
+            if (got != want or float(cfg["lam"]) != float(lam)
+                    or float(cfg["eps"]) != float(eps)):
+                raise ValueError(
+                    f"checkpoint under {checkpoint_dir!r} was written by "
+                    f"an incompatible solve (saved {got}, this solve "
+                    f"{want}) — pass resume=False or a fresh "
+                    "checkpoint_dir")
+            sol = _tree["solver"]
+            t = int(sol["t"])
+            err = float(sol["err"])
+            t_first = int(sol["t_first"])
+            need_refresh = bool(int(sol["need_refresh"]))
+            annex_cursor = int(sol["annex_cursor"])
+            num_chunks = int(sol["num_chunks"])
+            indices = jnp.asarray(sol["indices"])
+            mask = jnp.asarray(sol["mask"])
+            weights = jnp.asarray(sol["weights"])
+            rows = jnp.asarray(sol["rows"])
+            gram = jnp.asarray(sol["gram"])
+            absrow = jnp.asarray(sol["absrow"])
+            tcorr = jnp.asarray(sol["tcorr"])
+            residual = jnp.asarray(sol["residual"])
+            r0 = jnp.asarray(sol["r0"])
+            bi = jnp.asarray(sol["bi"])
+            br = jnp.asarray(sol["br"])
+            bdead = jnp.asarray(sol["bdead"])
+            chunk_thresh = jnp.asarray(sol["chunk_thresh"])
+            chunk_norm = jnp.asarray(sol["chunk_norm"])
+            chunk_cached = jnp.asarray(sol["chunk_cached"])
+            host = _tree["host"]
+            chunk_meta.extend(
+                zip(np.asarray(host["chunk_off"]).tolist(),
+                    np.asarray(host["chunk_len"]).tolist()))
+            chunk_norm_host.extend(
+                float(x) for x in np.asarray(host["chunk_norm_host"]))
+            quarantined.update(
+                int(x) for x in np.asarray(host["quarantined"]))
+            for kk, vv in _tree["stats"].items():
+                setattr(stats, kk, int(vv))
+            cache.load_state(_tree["arena"])
+            masks_t = _tree.get("masks")
+            if masks_t is not None:
+                ar_taken = jnp.asarray(masks_t["ar_taken"])
+                ar_inbuf = jnp.asarray(masks_t["ar_inbuf"])
+            rebuild_chunk_map()
+            stats.resumes += 1
+            last_ckpt = t
+            resumed = True
+
+    if (not resumed and cache.complete > 0 and cache.covers(cache.complete)
             and row_fetch is not None):
         # Bootstrap from a pre-warmed cache (serve admission already paid
         # the summing pass and filled it): the first buffer refresh is a
@@ -1044,8 +1379,6 @@ def omp_select_streaming(
         sync_arena_masks()
         rebuild_chunk_map()
 
-    need_refresh = True
-    t_first = -1
     while t < k and err > eps:
         if need_refresh:
             if not cache_refill():
@@ -1093,6 +1426,11 @@ def omp_select_streaming(
                                            - len(cache.entries))
         t = t_new
         t_first = -1
+        if (checkpoint_dir is not None and bi is not None and t > last_ckpt
+                and t - last_ckpt >= checkpoint_every):
+            save_solver_state(checkpoint_dir, t, _capture_tree())
+            last_ckpt = t
+            stats.checkpoints += 1
         if t >= k or err <= eps:
             break
         if go:
@@ -1119,11 +1457,7 @@ def omp_select_streaming(
             # inside the clamp.
             ids_np[free:] = -1
             pos_np[free:] = cache.cap_rows
-            live = ids_np >= 0
-            fetched = np.zeros((fm, d), np.float32)
-            if live.any():
-                fetched[live] = np.asarray(
-                    row_fetch(ids_np[live]), np.float32)
+            fetched, live = checked_fetch(ids_np, pos_np)
             br, bi, bdead, ar_inbuf = _admit_fetched(
                 br, bi, bdead, jnp.asarray(fetched),
                 jnp.asarray(np.where(live, ids_np, -1)),
@@ -1155,6 +1489,10 @@ def gradmatch_streaming(
     cache: Optional[ChunkCache] = None,
     cache_bytes: int = DEFAULT_CACHE_BYTES,
     row_fetch: Optional[Callable] = None,
+    retry: Optional["RetryPolicy"] = None,
+    checkpoint_dir: Optional[str] = None,
+    checkpoint_every: int = 8,
+    resume: bool = True,
 ) -> SelectionResult:
     """GRAD-MATCH over a chunked pool; target defaults to one summing pass
     (which also warms the compressed cache).  The returned
@@ -1165,11 +1503,13 @@ def gradmatch_streaming(
             if first is None:
                 raise ValueError("empty pool iterator")
             cache = ChunkCache(cache_bytes, int(first[0].shape[1]))
-        target, _ = streaming_target(pool_iter, cache=cache)
+        target, _ = streaming_target(pool_iter, cache=cache, retry=retry)
     out = omp_select_streaming(
         pool_iter, target, k, lam=lam, eps=eps, buffer_size=buffer_size,
         chunk_topm=chunk_topm, score_chunk_fn=score_chunk_fn, cache=cache,
-        cache_bytes=cache_bytes, row_fetch=row_fetch)
+        cache_bytes=cache_bytes, row_fetch=row_fetch, retry=retry,
+        checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every,
+        resume=resume)
     return SelectionResult(out.indices, _normalize(out.weights, out.mask),
                            out.mask, out.err, out.stats)
 

@@ -13,6 +13,7 @@ of the subset it drew (the trainer multiplies by nothing further).
 
 from __future__ import annotations
 
+import os
 from typing import Iterator, NamedTuple, Optional
 
 import jax
@@ -24,6 +25,31 @@ class LoaderState(NamedTuple):
     epoch: jax.Array     # () int32
     cursor: jax.Array    # () int32 — position within the current permutation
     key: jax.Array       # PRNG key for the *next* permutation
+
+
+def _check_memmap(arr, name: str) -> None:
+    """Refuse a memmap whose backing file is shorter than its claimed view.
+
+    A truncated backing file (partial copy, interrupted download, wrong
+    dtype/shape at open) fails *late* otherwise — as a SIGBUS or zeros in
+    the tail chunks of a streaming pass, which the corruption detector
+    would then quarantine row by row.  Catching the size mismatch at pool
+    construction turns that into one early, descriptive error.
+    """
+    if not isinstance(arr, np.memmap):
+        return
+    filename = getattr(arr, "filename", None)
+    if filename is None:
+        return
+    need = int(getattr(arr, "offset", 0)) + arr.nbytes
+    have = os.path.getsize(filename)
+    if have < need:
+        raise ValueError(
+            f"memmap-backed {name} is truncated: {filename!r} holds "
+            f"{have} bytes but shape {arr.shape} / dtype {arr.dtype} at "
+            f"offset {int(getattr(arr, 'offset', 0))} needs {need} — the "
+            "backing file is incomplete (partial copy?) or the "
+            "shape/dtype used to open it is wrong")
 
 
 class ChunkedPool:
@@ -38,6 +64,9 @@ class ChunkedPool:
     """
 
     def __init__(self, x, y=None, chunk_size: int = 4096):
+        _check_memmap(x, "x")
+        if y is not None:
+            _check_memmap(y, "y")
         self.x = x
         self.y = y
         self.chunk_size = int(chunk_size)

@@ -1,0 +1,45 @@
+"""Fault model, injection harness, and recovery machinery (DESIGN.md §8).
+
+The streaming engine (core/streaming.py) and the selection service
+(serve/) promise *certified* answers — bit-identical to the dense
+reference solve.  That promise is only worth anything in production if it
+survives the failures production actually has: transient loader I/O
+errors, corrupted chunk reads, slow storage, processes killed mid-solve,
+and pools whose backing data has gone permanently bad.  This package
+supplies both halves of that story:
+
+* **Injection** (``faults``): seeded, deterministic wrappers that make a
+  chunk factory or ``row_fetch`` misbehave on a reproducible schedule —
+  the test substrate for every recovery path.
+* **Recovery** (``recovery``): the bounded-retry / exponential-backoff
+  policy shared by the streaming engine and the serve tier, with an
+  injectable sleeper so tests never actually wait.
+* **Circuit breaking** (``circuit``): per-pool closed → open → half-open
+  breakers so a permanently poisoned pool fails fast instead of wedging
+  the scheduler queue behind endless retries.
+* **Degradation** (``degrade``): the graceful-degradation ladder the
+  serve tier walks when a certified solve cannot be had — resume from
+  checkpoint, answer from an anytime-session prefix, or fall back to a
+  stochastic in-cache solve — each answer labelled with the level that
+  produced it, never silently passed off as certified.
+"""
+
+from repro.resilience.circuit import BreakerBoard, CircuitBreaker, CircuitOpen
+from repro.resilience.degrade import (DEGRADE_LEVELS, DeadlineExceeded,
+                                      stochastic_fallback)
+from repro.resilience.faults import (ChunkReadError, CorruptChunkError,
+                                     FaultError, FaultPlan,
+                                     FaultyChunkIterator, RowFetchError,
+                                     StreamDied, TransientFault,
+                                     faulty_row_fetch)
+from repro.resilience.recovery import (RetryExhausted, RetryPolicy,
+                                       with_retries)
+
+__all__ = [
+    "BreakerBoard", "CircuitBreaker", "CircuitOpen",
+    "DEGRADE_LEVELS", "DeadlineExceeded", "stochastic_fallback",
+    "ChunkReadError", "CorruptChunkError", "FaultError", "FaultPlan",
+    "FaultyChunkIterator", "RowFetchError", "StreamDied", "TransientFault",
+    "faulty_row_fetch",
+    "RetryExhausted", "RetryPolicy", "with_retries",
+]

@@ -1,0 +1,79 @@
+"""The graceful-degradation ladder: a labelled answer beats no answer.
+
+When a certified streaming solve cannot be had — retries exhausted,
+stream dead — the serve tier walks down a ladder of progressively weaker
+answers instead of failing outright.  Every rung is *labelled* on the
+ticket (``Ticket.degradation``), because the one unforgivable outcome is
+passing a weaker answer off as certified:
+
+``certified``       the real thing: streaming solve, certificate ladder
+                    intact (also covers in-memory batched solves).
+``resumed``         certified solve completed by resuming from the
+                    mid-solve checkpoint of a failed attempt — the
+                    answer is still bit-identical to fault-free, the
+                    label records that recovery did the work.
+``anytime-prefix``  first-k prefix of a live anytime session on the same
+                    pool content: indices certified by the prefix
+                    property, weights renormalized (approximate).
+``stochastic``      seeded stochastic-greedy OMP over the rows resident
+                    in the pool's compressed chunk cache — an in-memory
+                    solve over a subsample, clearly approximate.
+``timeout``/``failed``  no answer: deadline expired before work started,
+                    or every rung failed.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class DeadlineExceeded(RuntimeError):
+    """The request's deadline expired before a solve could start."""
+
+
+DEGRADE_LEVELS = ("certified", "resumed", "anytime-prefix", "stochastic",
+                  "timeout", "failed")
+
+
+def stochastic_fallback(cache, target, k: int, seed: int = 0,
+                        lam: float = 0.5, eps: float = 1e-10,
+                        positive: bool = True,
+                        sample_factor: int = 4,
+                        min_sample: int = 256):
+    """Last-resort selection from whatever the chunk cache holds.
+
+    Decompresses the live (non-quarantined) bf16 arena rows, draws a
+    seeded subsample of ``max(sample_factor*k, min_sample)`` of them, and
+    runs the in-memory OMP on the subsample — stochastic-greedy in
+    spirit: cheap, loader-free, and approximate.  Returns a
+    ``SelectionResult`` whose indices are *global* row ids, or ``None``
+    when the cache holds nothing usable (the ladder's next stop is
+    failure).
+    """
+    from repro.core import omp as omp_lib
+
+    if cache is None or cache.gids is None:   # no arena (cache_bytes=0)
+        return None
+    gids = np.asarray(cache.gids)
+    ok = np.asarray(cache.ok)
+    live = (gids >= 0) & ok
+    n_live = int(live.sum())
+    if n_live == 0:
+        return None
+    pos = np.flatnonzero(live)
+    sample = min(max(int(sample_factor) * int(k), int(min_sample)), n_live)
+    rng = np.random.default_rng(int(seed))
+    pick = np.sort(rng.choice(pos, size=sample, replace=False))
+    rows = jnp.asarray(cache.rows[jnp.asarray(pick)], jnp.float32)
+    idx, w, mask, err = omp_lib.omp_select(
+        rows, jnp.asarray(target, jnp.float32), int(k), lam=lam, eps=eps,
+        positive=positive)
+    local = np.asarray(idx)
+    m = np.asarray(mask)
+    global_idx = np.where(m, gids[pick[np.clip(local, 0, sample - 1)]], -1)
+    from repro.core.gradmatch import SelectionResult
+    return SelectionResult(jnp.asarray(global_idx, jnp.int32), w,
+                           jnp.asarray(m), err)

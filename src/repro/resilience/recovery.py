@@ -1,0 +1,73 @@
+"""Bounded retry with exponential backoff — the transient-fault answer.
+
+One policy object is shared by every recovery site (loader passes, row
+fetches, the serve tier's whole-solve retry) so "how hard do we try" is
+configured in one place.  The sleeper is injectable: tests drive hundreds
+of retries without waiting, production gets real backoff.
+
+Only ``TransientFault`` subclasses are retried — permanent faults
+(``StreamDied``, a poisoned pool) escape immediately so the caller's
+degradation ladder, not a retry loop, decides what happens next.
+Exhausted retries raise ``RetryExhausted`` (itself *not* transient: an
+outer retry layer must not multiply an inner one).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, Optional, Tuple, Type
+
+from repro.resilience.faults import FaultError, TransientFault
+
+
+class RetryExhausted(FaultError):
+    """A transient fault outlived its retry budget — treated as permanent."""
+
+
+@dataclass(frozen=True)
+class RetryPolicy:
+    """``max_retries`` re-attempts after the first try; delay before the
+    i-th retry is ``backoff_s * backoff_mult**i`` capped at
+    ``max_backoff_s``."""
+
+    max_retries: int = 4
+    backoff_s: float = 0.05
+    backoff_mult: float = 2.0
+    max_backoff_s: float = 1.0
+    sleep: Callable[[float], None] = time.sleep
+
+    def delay(self, attempt: int) -> float:
+        return min(self.backoff_s * self.backoff_mult ** attempt,
+                   self.max_backoff_s)
+
+
+# Retry-free policy: transient faults raise straight through (attempt 0
+# only).  Useful as an explicit "no recovery" switch in tests and gates.
+NO_RETRY = RetryPolicy(max_retries=0, backoff_s=0.0)
+
+
+def with_retries(fn: Callable, policy: RetryPolicy,
+                 transient: Tuple[Type[BaseException], ...] = (
+                     TransientFault,),
+                 on_retry: Optional[Callable[[int, BaseException], None]]
+                 = None):
+    """Run ``fn()`` with bounded retry of ``transient`` exceptions.
+
+    ``on_retry(attempt, exc)`` fires before each re-attempt (stats
+    accounting hooks).  Non-transient exceptions propagate untouched.
+    """
+    attempt = 0
+    while True:
+        try:
+            return fn()
+        except transient as exc:
+            if isinstance(exc, RetryExhausted) or \
+                    attempt >= policy.max_retries:
+                raise RetryExhausted(
+                    f"gave up after {attempt} retr"
+                    f"{'y' if attempt == 1 else 'ies'}: {exc}") from exc
+            if on_retry is not None:
+                on_retry(attempt, exc)
+            policy.sleep(policy.delay(attempt))
+            attempt += 1

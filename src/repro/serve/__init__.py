@@ -6,6 +6,10 @@ vmapped/batched multi-target OMP, anytime-budget sessions (k -> k'
 extension as a certified resume), and tenant admission/backpressure.
 """
 
+from repro.resilience.circuit import (BreakerBoard, CircuitBreaker,
+                                      CircuitOpen)
+from repro.resilience.degrade import DEGRADE_LEVELS, DeadlineExceeded
+from repro.resilience.recovery import RetryExhausted, RetryPolicy
 from repro.serve.admission import (AdmissionController, AdmissionError,
                                    BudgetExhausted, QueueFull,
                                    estimate_cost)
@@ -15,8 +19,10 @@ from repro.serve.service import SelectionService
 from repro.serve.sessions import Session, SessionGone, SessionStore
 
 __all__ = [
-    "AdmissionController", "AdmissionError", "BudgetExhausted", "QueueFull",
-    "estimate_cost", "PoolEntry", "PoolRegistry", "UnknownPool",
+    "AdmissionController", "AdmissionError", "BreakerBoard",
+    "BudgetExhausted", "CircuitBreaker", "CircuitOpen", "DEGRADE_LEVELS",
+    "DeadlineExceeded", "QueueFull", "estimate_cost", "PoolEntry",
+    "PoolRegistry", "RetryExhausted", "RetryPolicy", "UnknownPool",
     "RequestScheduler", "SelectRequest", "Ticket", "SelectionService",
     "Session", "SessionGone", "SessionStore",
 ]

@@ -151,15 +151,17 @@ class PoolRegistry:
 
     def register_chunked(self, pool, pool_id: Optional[str] = None,
                          valid=None,
-                         cache_bytes: int = stream_lib.DEFAULT_CACHE_BYTES
-                         ) -> str:
+                         cache_bytes: int = stream_lib.DEFAULT_CACHE_BYTES,
+                         retry=None) -> str:
         """Admit a ``ChunkedPool`` (or any ``(chunk, valid)`` factory).
 
         The default target is computed with one summing pass now — and
         the *same* pass warms the pool's compressed chunk cache, so the
         admission scan is never re-paid: every streaming request's
         certified rounds (and, for ``ChunkedPool``-backed pools, its
-        exact-row repairs) hit memory instead of the loader.
+        exact-row repairs) hit memory instead of the loader.  ``retry``
+        (a ``repro.resilience.RetryPolicy``) lets the admission pass ride
+        through transient loader faults the same way serving solves do.
         """
         if callable(pool):
             if valid is not None:
@@ -178,7 +180,8 @@ class PoolRegistry:
         first_chunk = first[0]
         cache = stream_lib.ChunkCache(
             int(cache_bytes), int(np.asarray(first_chunk).shape[1]))
-        target, n = stream_lib.streaming_target(chunk_iter, cache=cache)
+        target, n = stream_lib.streaming_target(chunk_iter, cache=cache,
+                                                retry=retry)
         fp_src = np.asarray(first_chunk, np.float32)
         fp = hashlib.sha1(
             repr((n, fp_src.shape)).encode()

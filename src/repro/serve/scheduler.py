@@ -20,13 +20,24 @@ tiers reuse the registry's cached FL scan, chunked pools run the
 streaming block-OMP, everything else goes through the ordinary
 ``selection.select`` dispatch.  Results are per-ticket ``SelectionResult``
 (weights re-normalized per request, exactly as the library path returns).
+
+Resilience (DESIGN.md §8): requests carry optional deadlines (expired
+tickets fail fast as ``timeout`` without burning a solve); chunked solves
+run under a bounded-retry policy with optional mid-solve checkpoints; a
+per-pool circuit breaker fails a poisoned pool fast instead of wedging
+the queue; and when a certified streaming solve cannot be had, the
+scheduler walks the graceful-degradation ladder (resume → anytime-prefix
+→ stochastic fallback), recording the rung on ``Ticket.degradation``.
 """
 
 from __future__ import annotations
 
+import hashlib
 import itertools
+import os
+import time
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -38,6 +49,10 @@ from repro.core import random_sel
 from repro.core import streaming as stream_lib
 from repro.core.gradmatch import SelectionResult, _normalize
 from repro.core.omp import omp_select_batched
+from repro.resilience.circuit import BreakerBoard, CircuitOpen
+from repro.resilience.degrade import DeadlineExceeded, stochastic_fallback
+from repro.resilience.faults import FaultError
+from repro.resilience.recovery import RetryPolicy
 from repro.serve.admission import AdmissionController, estimate_cost
 from repro.serve.registry import PoolEntry, PoolRegistry, UnknownPool
 
@@ -63,8 +78,11 @@ class SelectRequest:
     valid: Optional[object] = None      # (n,) bool array-like
     tenant: str = "default"
     seed: int = 0                       # random / craig-stochastic
+    deadline_s: Optional[float] = None  # fail fast past this queue age
 
     def batch_key(self):
+        # deadline_s deliberately excluded: it shapes *when* a ticket may
+        # still run, not *what* solve it is.
         return (self.pool_id, self.strategy, self.k, float(self.lam),
                 float(self.eps), self.positive)
 
@@ -78,6 +96,8 @@ class Ticket:
     result: Optional[SelectionResult] = None
     error: Optional[str] = None
     batched_with: int = 0               # group size the solve ran at
+    degradation: str = "none"           # rung served (resilience.DEGRADE_LEVELS)
+    submitted_at: float = 0.0           # scheduler clock at submit()
 
 
 def _bucket_b(b: int) -> int:
@@ -91,15 +111,32 @@ class RequestScheduler:
     def __init__(self, registry: PoolRegistry,
                  admission: Optional[AdmissionController] = None,
                  max_batch: int = 32,
-                 stream_buffer: int = 256):
+                 stream_buffer: int = 256,
+                 clock: Callable[[], float] = time.monotonic,
+                 retry: Optional[RetryPolicy] = None,
+                 breakers: Optional[BreakerBoard] = None,
+                 checkpoint_root: Optional[str] = None,
+                 checkpoint_every: int = 8,
+                 degrade: bool = True,
+                 session_lookup: Optional[Callable] = None):
         self.registry = registry
         self.admission = admission or AdmissionController()
         self.max_batch = int(max_batch)
         self.stream_buffer = int(stream_buffer)
+        self._clock = clock
+        self.retry = retry
+        self.breakers = breakers or BreakerBoard(clock=clock)
+        self.checkpoint_root = checkpoint_root
+        self.checkpoint_every = int(checkpoint_every)
+        self.degrade = bool(degrade)
+        # (pool_id, fingerprint, k) -> SelectionResult | None; wired by
+        # SelectionService to its session store (anytime-prefix rung).
+        self.session_lookup = session_lookup
         self._queue: list[Ticket] = []
         self._ids = itertools.count()
         self.batches_run = 0
         self.singles_run = 0
+        self.degraded_served = {}          # rung -> count
 
     # -- intake --------------------------------------------------------------
     def submit(self, req: SelectRequest) -> Ticket:
@@ -110,10 +147,13 @@ class RequestScheduler:
         if req.k <= 0:
             raise ValueError(f"k must be positive, got {req.k}")
         entry = self.registry.get(req.pool_id)   # raises UnknownPool
+        # Fail fast before charging the tenant: an open breaker means
+        # this request would only queue behind a poisoned pool.
+        self.breakers.get(req.pool_id).peek()    # raises CircuitOpen
         cost = estimate_cost(entry.n, entry.d, req.k)
         self.admission.admit(req.tenant, cost, len(self._queue))
         ticket = Ticket(ticket_id=f"req-{next(self._ids)}", request=req,
-                        cost=cost)
+                        cost=cost, submitted_at=self._clock())
         self._queue.append(ticket)
         return ticket
 
@@ -142,12 +182,25 @@ class RequestScheduler:
                     t.status = "failed"
                     t.error = f"{type(exc).__name__}: {exc}"
             else:
-                if head.request.strategy == "gradmatch" and entry.batchable:
-                    group = self._take_group(head.request.batch_key())
-                    self._run_gradmatch_batch(entry, group)
+                try:
+                    # The real admission through the breaker (submit only
+                    # peeks): an open pool fails its whole queued group
+                    # immediately — no solve, no retry burn, no wedge.
+                    self.breakers.get(head.request.pool_id).allow()
+                except CircuitOpen as exc:
+                    group = self._take_group_by_pool(head.request.pool_id)
+                    for t in group:
+                        t.status = "failed"
+                        t.degradation = "failed"
+                        t.error = f"{type(exc).__name__}: {exc}"
                 else:
-                    group = [self._queue.pop(0)]
-                    self._run_single(entry, group[0])
+                    if (head.request.strategy == "gradmatch"
+                            and entry.batchable):
+                        group = self._take_group(head.request.batch_key())
+                        self._run_gradmatch_batch(entry, group)
+                    else:
+                        group = [self._queue.pop(0)]
+                        self._run_single(entry, group[0])
             for t in group:
                 self.admission.complete(
                     t.request.tenant,
@@ -210,18 +263,100 @@ class RequestScheduler:
                                        mask[i], err[i])
             t.status = "done"
             t.batched_with = b
+            t.degradation = "certified"
+        self.breakers.get(entry.pool_id).record_success()
         self.batches_run += 1
+
+    @staticmethod
+    def _is_pool_fault(exc: BaseException) -> bool:
+        """Failures that indict the *pool* (count toward its breaker), as
+        opposed to a caller's malformed request: injected/real I-O faults
+        that exhausted retries, stream death, pass-budget blowups."""
+        return isinstance(exc, (FaultError,
+                                stream_lib.StreamingPassBudgetError))
 
     def _run_single(self, entry: PoolEntry, ticket: Ticket) -> None:
         req = ticket.request
+        breaker = self.breakers.get(entry.pool_id)
         try:
+            age = self._clock() - ticket.submitted_at
+            if req.deadline_s is not None and age > req.deadline_s:
+                ticket.degradation = "timeout"
+                raise DeadlineExceeded(
+                    f"deadline of {req.deadline_s}s expired before the "
+                    f"solve started (queued {age:.3f}s)")
             ticket.result = self._execute_single(entry, req)
             ticket.status = "done"
             ticket.batched_with = 1
-        except Exception as exc:          # surface, don't wedge the queue
+            ticket.degradation = "certified"
+            breaker.record_success()
+        except DeadlineExceeded as exc:
+            # Not a pool fault: the pool never got to run.
             ticket.status = "failed"
             ticket.error = f"{type(exc).__name__}: {exc}"
+        except Exception as exc:          # surface, don't wedge the queue
+            if self._is_pool_fault(exc):
+                breaker.record_failure()
+                if (self.degrade and req.strategy == "gradmatch"
+                        and entry.kind == "chunked"
+                        and self._degrade_chunked(entry, ticket, breaker)):
+                    self.singles_run += 1
+                    return
+            ticket.status = "failed"
+            ticket.degradation = "failed"
+            ticket.error = f"{type(exc).__name__}: {exc}"
         self.singles_run += 1
+
+    def _degrade_chunked(self, entry: PoolEntry, ticket: Ticket,
+                         breaker) -> bool:
+        """Walk the degradation ladder for a chunked gradmatch solve whose
+        certified attempt died on a pool fault.  Returns True when a rung
+        produced an answer (labelled on the ticket); the winning rung is
+        counted in ``degraded_served``."""
+        req = ticket.request
+        target = (entry.target_sum if req.target is None
+                  else jnp.asarray(req.target, jnp.float32))
+        # Rung 2: re-run the certified solve, resuming from the failed
+        # attempt's mid-solve checkpoint.  Still bit-identical to
+        # fault-free when it completes — the label records that recovery
+        # (not the first attempt) produced it.
+        if self.checkpoint_root is not None:
+            try:
+                ticket.result = self._execute_single(entry, req)
+            except Exception as exc2:
+                if self._is_pool_fault(exc2):
+                    breaker.record_failure()
+            else:
+                self._served(ticket, "resumed")
+                breaker.record_success()
+                return True
+        # Rung 3: first-k prefix of a live anytime session over the same
+        # pool content (indices certified by the prefix property).
+        if self.session_lookup is not None:
+            res = self.session_lookup(entry.pool_id, entry.fingerprint,
+                                      req.k)
+            if res is not None:
+                ticket.result = res
+                self._served(ticket, "anytime-prefix")
+                return True
+        # Rung 4: seeded stochastic-greedy over the rows still resident in
+        # the pool's compressed cache — approximate, loader-free.
+        res = stochastic_fallback(entry.cache, target, req.k,
+                                  seed=req.seed, lam=req.lam, eps=req.eps,
+                                  positive=req.positive)
+        if res is not None:
+            ticket.result = SelectionResult(
+                res.indices, _normalize(res.weights, res.mask), res.mask,
+                res.err)
+            self._served(ticket, "stochastic")
+            return True
+        return False
+
+    def _served(self, ticket: Ticket, rung: str) -> None:
+        ticket.status = "done"
+        ticket.batched_with = 1
+        ticket.degradation = rung
+        self.degraded_served[rung] = self.degraded_served.get(rung, 0) + 1
 
     def _execute_single(self, entry: PoolEntry,
                         req: SelectRequest) -> SelectionResult:
@@ -247,7 +382,10 @@ class RequestScheduler:
             return stream_lib.gradmatch_streaming(
                 entry.chunk_iter, req.k, target=target, lam=req.lam,
                 eps=req.eps, buffer_size=self.stream_buffer,
-                cache=entry.cache, row_fetch=entry.row_fetch)
+                cache=entry.cache, row_fetch=entry.row_fetch,
+                retry=self.retry,
+                checkpoint_dir=self._checkpoint_dir(entry, req, target),
+                checkpoint_every=self.checkpoint_every)
         if entry.kind != "array":
             raise ValueError(
                 f"strategy {req.strategy!r} needs a resident pool")
@@ -268,7 +406,28 @@ class RequestScheduler:
                                        valid=valid)
         raise ValueError(f"unservable strategy {req.strategy!r}")
 
+    def _checkpoint_dir(self, entry: PoolEntry,
+                        req: SelectRequest, target) -> Optional[str]:
+        """Per-*solve* checkpoint directory under ``checkpoint_root``.
+
+        The solver refuses to resume a checkpoint from an incompatible
+        solve, but the target vector is not part of its compatibility
+        check — so the directory key hashes everything that defines the
+        solve (pool content, k, lam/eps/positive, target bytes).  Two
+        different asks never share a directory.
+        """
+        if self.checkpoint_root is None:
+            return None
+        h = hashlib.sha1(repr(
+            (entry.fingerprint, req.k, float(req.lam), float(req.eps),
+             req.positive)).encode())
+        h.update(np.asarray(target, np.float32).tobytes())
+        return os.path.join(self.checkpoint_root,
+                            f"{entry.pool_id}-{h.hexdigest()[:12]}")
+
     def stats(self) -> dict:
         return {"pending": len(self._queue),
                 "batches_run": self.batches_run,
-                "singles_run": self.singles_run}
+                "singles_run": self.singles_run,
+                "degraded_served": dict(self.degraded_served),
+                "breakers": self.breakers.stats()}

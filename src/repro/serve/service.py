@@ -30,7 +30,9 @@ import jax.numpy as jnp
 
 from repro.core.gradmatch import SelectionResult, _normalize
 from repro.core.omp import (omp_session_extend, omp_session_start,
-                            session_result)
+                            session_prefix_result, session_result)
+from repro.resilience.circuit import BreakerBoard
+from repro.resilience.recovery import RetryPolicy
 from repro.serve.admission import AdmissionController, estimate_cost
 from repro.serve.registry import PoolRegistry, UnknownPool
 from repro.serve.scheduler import RequestScheduler, SelectRequest, Ticket
@@ -48,17 +50,29 @@ class SelectionService:
         default_budget_units: Optional[float] = None,
         max_inflight_per_tenant: int = 16,
         clock=None,
+        retry_policy: Optional[RetryPolicy] = None,
+        breaker_threshold: int = 3,
+        breaker_cooldown_s: float = 30.0,
+        checkpoint_root: Optional[str] = None,
+        degrade: bool = True,
     ):
         self.registry = PoolRegistry(max_pools=max_pools)
         self.admission = AdmissionController(
             max_queue=max_queue,
             default_budget_units=default_budget_units,
             max_inflight_per_tenant=max_inflight_per_tenant)
-        self.scheduler = RequestScheduler(self.registry, self.admission,
-                                          max_batch=max_batch)
-        kwargs = {} if clock is None else {"clock": clock}
+        clock_kw = {} if clock is None else {"clock": clock}
+        self.breakers = BreakerBoard(failure_threshold=breaker_threshold,
+                                     cooldown_s=breaker_cooldown_s,
+                                     **clock_kw)
+        self.scheduler = RequestScheduler(
+            self.registry, self.admission, max_batch=max_batch,
+            retry=retry_policy, breakers=self.breakers,
+            checkpoint_root=checkpoint_root, degrade=degrade,
+            session_lookup=self._prefix_lookup, **clock_kw)
+        self.retry_policy = retry_policy
         self.sessions = SessionStore(max_sessions=max_sessions,
-                                     ttl_s=session_ttl_s, **kwargs)
+                                     ttl_s=session_ttl_s, **clock_kw)
 
     # -- pools ---------------------------------------------------------------
     def register_pool(self, pool, pool_id: Optional[str] = None,
@@ -66,9 +80,10 @@ class SelectionService:
         return self.registry.register(pool, pool_id=pool_id, valid=valid)
 
     def register_chunked_pool(self, pool, pool_id: Optional[str] = None,
-                              valid=None) -> str:
+                              valid=None, **kw) -> str:
         return self.registry.register_chunked(pool, pool_id=pool_id,
-                                              valid=valid)
+                                              valid=valid,
+                                              retry=self.retry_policy, **kw)
 
     # -- one-shot requests ---------------------------------------------------
     def submit(self, pool_id: str, k: int, strategy: str = "gradmatch",
@@ -166,12 +181,27 @@ class SelectionService:
         idx, w, mask, err = session_result(state)
         return SelectionResult(idx, _normalize(w, mask), mask, err)
 
+    def _prefix_lookup(self, pool_id: str, fingerprint: str,
+                       k: int) -> Optional[SelectionResult]:
+        """Anytime-prefix rung of the degradation ladder: the first-``k``
+        prefix of a live session over the same pool *content*.  Indices
+        are certified by the prefix property; weights are the session's
+        (renormalized, approximate for the prefix)."""
+        for sess in self.sessions.live():
+            if (sess.pool_id == pool_id
+                    and sess.pool_fingerprint == fingerprint
+                    and sess.state.k >= k):
+                idx, w, mask, err = session_prefix_result(sess.state, k)
+                return SelectionResult(idx, _normalize(w, mask), mask, err)
+        return None
+
     # -- observability -------------------------------------------------------
     def stats(self) -> dict:
         return {"registry": self.registry.stats(),
                 "scheduler": self.scheduler.stats(),
                 "sessions": self.sessions.stats(),
-                "tenants": self.admission.stats()}
+                "tenants": self.admission.stats(),
+                "breakers": self.breakers.stats()}
 
 
 __all__ = ["SelectionService", "SelectRequest", "Ticket", "SessionGone",

@@ -95,6 +95,12 @@ class SessionStore:
     def close(self, session_id: str) -> bool:
         return self._sessions.pop(session_id, None) is not None
 
+    def live(self) -> list[Session]:
+        """Snapshot of live sessions (sweeps first, does not touch LRU) —
+        the degradation ladder scans this for a same-pool anytime prefix."""
+        self.sweep()
+        return list(self._sessions.values())
+
     def sweep(self) -> int:
         """Drop sessions idle past the TTL; returns how many were dropped."""
         now = self._clock()

@@ -9,3 +9,18 @@ import pytest
 @pytest.fixture(scope="session")
 def rng():
     return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _bounded_compile_cache():
+    """Drop compiled XLA programs between test modules.
+
+    The suite compiles thousands of distinct (function, shape) programs;
+    XLA:CPU keeps every live executable mapped and segfaults inside
+    ``backend_compile`` once enough of them accumulate in one process
+    (observed deterministically at the suite's tail on jaxlib 0.4.36).
+    Modules are independent — each recompiles its own shapes on entry —
+    so clearing per module bounds the live-executable count without
+    changing any test's behavior."""
+    yield
+    jax.clear_caches()

@@ -25,10 +25,14 @@ import numpy as np
 import pytest
 
 from repro.core import selection as sel_lib
+from repro.core import streaming as stream_lib
+from repro.core.gradmatch import SelectionResult, _normalize
 from repro.core.omp import (omp_select, omp_select_batched,
                             omp_session_extend, omp_session_start,
-                            session_result)
+                            session_prefix_result, session_result)
 from repro.data.loader import ChunkedPool
+from repro.resilience import (CircuitOpen, FaultPlan, FaultyChunkIterator,
+                              RetryPolicy)
 from repro.serve import (BudgetExhausted, QueueFull, SelectionService,
                          SessionGone, UnknownPool)
 
@@ -521,3 +525,204 @@ def test_persist_merges_by_table(tmp_path, monkeypatch):
     data2 = json.loads(common.persist("test", rows_a2).read_text())
     assert any(r.get("strategy") == "gradmatch-stream"
                for r in data2["rows"])
+
+
+# ---------------------------------------------------------------------------
+# resilience: circuit breakers, degradation ladder, deadlines (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+_FAST_RETRY = RetryPolicy(max_retries=2, backoff_s=0.0, sleep=lambda s: None)
+
+
+def _poisoned_factory(g, chunk=32, die_after=5, die_once=False, seed=0):
+    """A chunk factory that dies permanently (or once) mid-stream.
+
+    Registration consumes 1 peeked chunk + one full warm pass, so for a
+    4-chunk pool ``die_after=5`` admits cleanly and kills the very first
+    serving solve that touches the loader.
+    """
+    pool = ChunkedPool(g, chunk_size=chunk)
+    return FaultyChunkIterator(
+        stream_lib.chunked_pool_iter(pool),
+        FaultPlan(seed=seed, die_after_chunks=die_after, die_once=die_once))
+
+
+def test_breaker_opens_poisoned_pool_healthy_pools_unaffected():
+    """Survivability smoke: a poisoned pool trips its breaker and fails
+    its queued work with labelled tickets; other pools on the same
+    service keep serving certified answers; no queue wedge, no in-flight
+    slot leak, no tenant-budget leak."""
+    clock = {"t": 0.0}
+    svc = _service(default_budget_units=1e9, breaker_threshold=2,
+                   breaker_cooldown_s=60.0, clock=lambda: clock["t"],
+                   retry_policy=_FAST_RETRY)
+    p_arr = svc.register_pool(_pool(30, 64, 8))
+    p_ok = svc.register_chunked_pool(ChunkedPool(_pool(31, 128, 8),
+                                                 chunk_size=32))
+    p_bad = svc.register_chunked_pool(_poisoned_factory(_pool(32, 128, 8)),
+                                      cache_bytes=0)
+    t_bad1 = svc.submit(p_bad, k=8, tenant="m")
+    t_bad2 = svc.submit(p_bad, k=8, tenant="m")
+    t_bad3 = svc.submit(p_bad, k=8, tenant="m")
+    t_arr = svc.submit(p_arr, k=8, tenant="m")
+    t_ok = svc.submit(p_ok, k=8, tenant="m")
+    svc.drain()
+    assert t_arr.status == "done" and t_arr.degradation == "certified"
+    assert t_ok.status == "done" and t_ok.degradation == "certified"
+    for t in (t_bad1, t_bad2, t_bad3):
+        assert t.status == "failed" and t.degradation == "failed"
+    # the third never ran: the breaker opened at threshold=2 and the
+    # drain fast-failed the rest of the pool's queued group
+    assert "circuit" in t_bad3.error.lower()
+    acct = svc.admission.account("m")
+    assert acct.inflight == 0
+    assert acct.used_units == pytest.approx(t_arr.cost + t_ok.cost)
+    assert svc.scheduler.pending() == 0
+    # while open, submit fast-fails before charging the tenant
+    with pytest.raises(CircuitOpen):
+        svc.submit(p_bad, k=8, tenant="m")
+    assert svc.admission.account("m").inflight == 0
+    # cooldown -> half-open trial; the pool is still dead -> re-opens
+    clock["t"] = 61.0
+    t_retry = svc.submit(p_bad, k=8, tenant="m")
+    svc.drain()
+    assert t_retry.status == "failed"
+    with pytest.raises(CircuitOpen):
+        svc.submit(p_bad, k=8, tenant="m")
+    assert svc.admission.account("m").inflight == 0
+    assert svc.admission.account("m").used_units == pytest.approx(
+        t_arr.cost + t_ok.cost)
+
+
+def test_degradation_exhausted_refunds_exactly_once():
+    """Nested failure (certified attempt dies, every ladder rung declines)
+    must refund the admission charge exactly once — not zero times (a
+    metered tenant paying for undelivered work) and not twice (the
+    degrade path double-refunding inside the failure handler)."""
+    svc = _service(default_budget_units=1e9, retry_policy=_FAST_RETRY,
+                   breaker_threshold=100)
+    p_ok = svc.register_pool(_pool(33, 64, 8))
+    t_ok = svc.submit(p_ok, k=4, tenant="m")
+    svc.drain()
+    base = svc.admission.account("m").used_units
+    assert base > 0                      # a real charge to drift against
+    # cache_bytes=0: the stochastic rung has no arena to fall back on,
+    # so with no checkpoints and no sessions the whole ladder declines.
+    pid = svc.register_chunked_pool(_poisoned_factory(_pool(34, 128, 8)),
+                                    cache_bytes=0)
+    for _ in range(2):                   # repeatable: no cumulative drift
+        t = svc.submit(pid, k=8, tenant="m")
+        assert svc.admission.account("m").used_units == pytest.approx(
+            base + t.cost)
+        svc.drain()
+        assert t.status == "failed" and t.degradation == "failed"
+        acct = svc.admission.account("m")
+        assert acct.used_units == pytest.approx(base)
+        assert acct.inflight == 0
+
+
+def test_degradation_stochastic_rung_serves_from_cache():
+    """Stream dead, no checkpoint, no session: the ladder's last rung
+    serves a seeded stochastic selection from the admission-warmed chunk
+    cache, labelled — never passed off as certified."""
+    svc = _service(retry_policy=_FAST_RETRY)
+    g = _pool(35, 128, 8)
+    pid = svc.register_chunked_pool(_poisoned_factory(g))
+    svc.scheduler.stream_buffer = 16     # force the solve to the loader
+    t = svc.submit(pid, k=12)
+    svc.drain()
+    assert t.status == "done" and t.degradation == "stochastic"
+    idx = np.asarray(t.result.indices)
+    m = np.asarray(t.result.mask)
+    sel = idx[m]
+    assert len(set(sel.tolist())) == 12
+    assert sel.min() >= 0 and sel.max() < 128
+    assert np.asarray(t.result.weights)[m].sum() == pytest.approx(1.0,
+                                                                  rel=1e-5)
+    assert svc.scheduler.stats()["degraded_served"] == {"stochastic": 1}
+    # same seed, same cache -> deterministic fallback
+    t2 = svc.submit(pid, k=12)
+    svc.drain()
+    np.testing.assert_array_equal(np.asarray(t2.result.indices), idx)
+
+
+def test_degradation_resumed_rung_bit_identical(tmp_path):
+    """A solve killed mid-stream once (crashed-and-restarted loader) is
+    re-run by the ladder's first rung, resumes from its own mid-solve
+    checkpoint, and returns the *certified* answer — bit-identical to a
+    never-faulted service — labelled "resumed"."""
+    g = _pool(36, 128, 8)
+
+    ref_svc = _service(retry_policy=_FAST_RETRY)
+    ref_pid = ref_svc.register_chunked_pool(
+        stream_lib.chunked_pool_iter(ChunkedPool(g, chunk_size=32)),
+        cache_bytes=0)
+    ref_svc.scheduler.stream_buffer = 16
+    ref = ref_svc.select(ref_pid, k=12)
+
+    svc = _service(retry_policy=_FAST_RETRY,
+                   checkpoint_root=str(tmp_path / "ckpt"))
+    pid = svc.register_chunked_pool(
+        _poisoned_factory(g, die_after=12, die_once=True), cache_bytes=0)
+    svc.scheduler.stream_buffer = 16
+    svc.scheduler.checkpoint_every = 1
+    t = svc.submit(pid, k=12)
+    svc.drain()
+    assert t.status == "done" and t.degradation == "resumed"
+    np.testing.assert_array_equal(np.asarray(t.result.indices),
+                                  np.asarray(ref.indices))
+    np.testing.assert_array_equal(np.asarray(t.result.mask),
+                                  np.asarray(ref.mask))
+    np.testing.assert_array_equal(np.asarray(t.result.weights),
+                                  np.asarray(ref.weights))
+    assert svc.scheduler.stats()["degraded_served"] == {"resumed": 1}
+
+
+def test_degradation_anytime_prefix_rung():
+    """When a live anytime session covers the same pool content at k' >=
+    k, the ladder serves its first-k prefix (indices certified by the
+    prefix property) before falling to stochastic."""
+    svc = _service(retry_policy=_FAST_RETRY)
+    g = _pool(38, 128, 8)
+    pid = svc.register_chunked_pool(_poisoned_factory(g), cache_bytes=0)
+    gj = jnp.asarray(g)
+    target = jnp.sum(gj, axis=0)
+    sess = omp_session_start(gj, target, 24)
+    calls = []
+
+    def lookup(pool_id, fingerprint, k):
+        calls.append((pool_id, k))
+        idx, w, mask, err = session_prefix_result(sess, k)
+        return SelectionResult(idx, _normalize(w, mask), mask, err)
+
+    svc.scheduler.session_lookup = lookup
+    t = svc.submit(pid, k=10)
+    svc.drain()
+    assert t.status == "done" and t.degradation == "anytime-prefix"
+    assert calls == [(pid, 10)]
+    one = omp_select(gj, target, k=24)
+    np.testing.assert_array_equal(np.asarray(t.result.indices),
+                                  np.asarray(one[0])[:10])
+
+
+def test_deadline_expired_ticket_timeout_refund():
+    """A request whose deadline expires while queued fails fast with the
+    "timeout" label before any solve runs, refunds its charge, and does
+    not count against the pool's breaker."""
+    clock = {"t": 0.0}
+    svc = _service(default_budget_units=1e9, clock=lambda: clock["t"])
+    g = _pool(37, 96, 8)
+    pid = svc.register_chunked_pool(ChunkedPool(g, chunk_size=32))
+    t_late = svc.submit(pid, k=8, tenant="m", deadline_s=5.0)
+    t_ok = svc.submit(pid, k=6, tenant="m")          # no deadline
+    clock["t"] = 9.0                                 # queued past deadline
+    svc.drain()
+    assert t_late.status == "failed"
+    assert t_late.degradation == "timeout"
+    assert "DeadlineExceeded" in t_late.error
+    assert t_ok.status == "done" and t_ok.degradation == "certified"
+    acct = svc.admission.account("m")
+    assert acct.inflight == 0
+    assert acct.used_units == pytest.approx(t_ok.cost)
+    # a deadline miss is the caller's fault, not the pool's
+    assert svc.submit(pid, k=4, tenant="m") is not None
