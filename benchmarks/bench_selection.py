@@ -18,6 +18,10 @@ and peak-memory proxies (chunk + buffer bytes vs resident pool bytes).
 ``run_greedy`` times the certified lazy / stochastic CRAIG tiers
 (DESIGN.md §5) at pools where the dense greedy is skipped, including a
 pool-32768 run whose (n, n) similarity is never materialized.
+
+``run_partitioned`` times partition-and-merge sharded selection
+(DESIGN.md §9): near-linear partition scaling at 65536 and the flat
+streaming-overhead ratio on a >= 1M-row disk-memmap pool.
 """
 
 from __future__ import annotations
@@ -418,10 +422,128 @@ def run_faults(pool=8192, d=64, k=256, chunk=1024, buffer_size=256,
     return rows
 
 
+def run_partitioned(scale_pool=65536, scale_parts=(1, 2, 4, 8), d=64,
+                    k=512, ooc_pool=1 << 20, part_rows=65536,
+                    quick=False) -> list[dict]:
+    """Partition-and-merge sharded selection (core/partition.py,
+    DESIGN.md §9) — the two claims this table tracks:
+
+    * **near-linear partition scaling** at a fixed pool: total engine
+      rounds drop to ~k/P per partition, so the streaming solve speeds up
+      close to P even on one device (the P = 1 row *is* the plain
+      streaming engine over the whole pool).
+    * **flat out-of-core overhead**: growing the pool 65k -> >= 1M rows at
+      fixed per-partition size (``part_rows`` rows, so P = n /
+      ``part_rows``) keeps the streaming-overhead ratio (partitioned
+      stream vs the same partitioned solve on a resident pool) within
+      1.5x of the 65k ratio — versus the unpartitioned engine whose
+      ratio climbed 3.75x@8k -> 8.6x@65k (``selection_stream``).  The
+      >= 1M-row pool lives in a disk memmap: the solver's certified
+      engines never hold more than one partition's working set.
+    """
+    import os
+    import shutil
+    import tempfile
+
+    import numpy as np
+
+    from repro.core import partition as part_lib
+
+    if quick:
+        scale_pool, scale_parts, k = 16384, (1, 2, 4), 128
+        ooc_pool, part_rows = 65536, 16384
+    rows = []
+    record = make_recorder("selection_partitioned", rows)
+
+    g = np.asarray(jax.random.normal(jax.random.PRNGKey(scale_pool),
+                                     (scale_pool, d)), np.float32)
+
+    def timed_pair(pool_arr, p):
+        def stream_once():
+            res = part_lib.gradmatch_partitioned_stream(
+                pool=pool_arr, k=k, partitions=p)
+            jax.block_until_ready(res.weights)
+            return res
+
+        def inmem_once():
+            res = part_lib.gradmatch_partitioned(
+                np.asarray(pool_arr), k, partitions=p, kind="contiguous")
+            jax.block_until_ready(res.weights)
+            return res
+
+        res = stream_once()                      # warm + stats
+        t_stream = time_fn(lambda: stream_once().weights, warmup=0, iters=2)
+        inmem_once()
+        t_inmem = time_fn(lambda: inmem_once().weights, warmup=0, iters=2)
+        return res, t_stream, t_inmem
+
+    t_p1 = ratio_65k = None
+    for p in scale_parts:
+        res, t_stream, t_inmem = timed_pair(g, p)
+        if t_p1 is None:
+            t_p1 = t_stream
+        s = res.stats.stream
+        record(strategy="gradmatch-partitioned-stream", pool=scale_pool,
+               k=k, partitions=p, ms=round(t_stream * 1e3, 2),
+               speedup_vs_p1=round(t_p1 / max(t_stream, 1e-9), 2),
+               union=res.stats.union_size, merged=res.stats.merged,
+               passes=s.passes, certified_rounds=s.certified_rounds,
+               err=round(float(res.err), 3))
+        record(strategy="gradmatch-partitioned-inmem", pool=scale_pool,
+               k=k, partitions=p, ms=round(t_inmem * 1e3, 2))
+        ratio = t_stream / max(t_inmem, 1e-9)
+        record(strategy="gradmatch-partitioned-overhead", pool=scale_pool,
+               k=k, partitions=p, ratio=round(ratio, 2))
+        if p == scale_pool // part_rows:
+            ratio_65k = ratio
+    if ratio_65k is None:          # per-partition anchor not in the grid
+        ratio_65k = ratio
+
+    # Out-of-core: >= 1M rows on disk, P sized to part_rows per partition.
+    td = tempfile.mkdtemp(prefix="bench-partitioned-")
+    try:
+        mm = np.memmap(os.path.join(td, "pool.f32"), np.float32, mode="w+",
+                       shape=(ooc_pool, d))
+        for i in range(0, ooc_pool, 65536):
+            stop = min(i + 65536, ooc_pool)
+            mm[i:stop] = np.asarray(
+                jax.random.normal(jax.random.PRNGKey(i), (stop - i, d)),
+                np.float32)
+        mm.flush()
+        p_ooc = max(ooc_pool // part_rows, 2)
+        res, t_stream, t_inmem = timed_pair(mm, p_ooc)
+        s = res.stats.stream
+        record(strategy="gradmatch-partitioned-stream", pool=ooc_pool,
+               k=k, partitions=p_ooc, ms=round(t_stream * 1e3, 2),
+               out_of_core=True, pool_bytes=ooc_pool * d * 4,
+               union=res.stats.union_size, merged=res.stats.merged,
+               passes=s.passes, certified_rounds=s.certified_rounds,
+               err=round(float(res.err), 3))
+        record(strategy="gradmatch-partitioned-inmem", pool=ooc_pool,
+               k=k, partitions=p_ooc, ms=round(t_inmem * 1e3, 2))
+        ratio_ooc = t_stream / max(t_inmem, 1e-9)
+        record(strategy="gradmatch-partitioned-overhead", pool=ooc_pool,
+               k=k, partitions=p_ooc, ratio=round(ratio_ooc, 2),
+               out_of_core=True)
+        # The 1.5x acceptance is a full-scale claim: below ~65k-row
+        # partitions the per-partition fixed costs (dispatch, target
+        # pass startup) dominate the numerator and the quick grid's
+        # flatness is informational only.
+        accept = {} if quick else {"acceptance": 1.5}
+        record(strategy="gradmatch-partitioned-flat", pool=ooc_pool, k=k,
+               part_rows=part_rows, ratio_small=round(ratio_65k, 2),
+               ratio_ooc=round(ratio_ooc, 2),
+               flatness=round(ratio_ooc / max(ratio_65k, 1e-9), 2),
+               **accept)
+    finally:
+        shutil.rmtree(td, ignore_errors=True)
+    return rows
+
+
 def main(quick=False) -> list[dict]:
     return (run(quick=quick) + run_streaming(quick=quick)
             + run_greedy(quick=quick) + run_serve(quick=quick)
-            + run_faults(quick=quick))
+            + run_partitioned(quick=quick) + run_faults(quick=quick))
 
 
 if __name__ == "__main__":

@@ -28,6 +28,13 @@ Checks, all against artifacts committed in the repo:
    15% the streaming solve must stay bit-identical to fault-free within
    1.5x its wall-clock, and a solve killed mid-stream must resume from
    its checkpoint to the same selection.
+6. **Partition-and-merge** (DESIGN.md §9): P = 1 partitioned selection
+   must be set-identical to the single solver, the class kind
+   set-identical to ``gradmatch_per_class`` (whose budget split must
+   place exactly ``min(k, n_valid)`` rows), hashed P = 4 within an
+   objective tolerance of the single solver, and the streaming solve
+   must scale near-linearly in P (t(P=4) <= 0.8 t(P=1), interleaved
+   min-of-3).
 
 Exit code 0 = gate passed.  ``python -m benchmarks.parity_gate``
 """
@@ -351,6 +358,87 @@ def check_fault_recovery(n=4096, d=64, k=128, chunk=512, rate=0.15,
     return ok
 
 
+def check_partitioned(n=4096, d=64, k=128, gap_tol=0.05,
+                      scale_n=16384, scale_k=256) -> bool:
+    """Partition-and-merge gate (core/partition.py, DESIGN.md §9).
+
+    Merge parity: P = 1 must reproduce the single solver's subset exactly
+    (the merge re-solves the same candidates against the same target);
+    the class kind must pick the same rows as ``gradmatch_per_class``
+    (same per-class solves, merge reweighted); hashed P = 4 must land
+    within ``gap_tol`` of the single solver's objective, normalized by
+    ||target||^2 (partitioning is a decomposition heuristic — the gate
+    bounds its cost, bit-equality is not the claim).  The budget-split
+    fix is asserted where it bites: k % C != 0 with a class smaller than
+    its quota still yields exactly min(k, n_valid) rows.  Scaling smoke:
+    the streaming solve at P = 4 must run in <= 0.8x the P = 1 time
+    (total rounds drop to ~k/P; interleaved min-of-3 cancels CI load
+    spikes)."""
+    import time as _time
+
+    from repro.core import gradmatch as gm_lib
+    from repro.core import partition as part_lib
+
+    g = np.asarray(jax.random.normal(jax.random.PRNGKey(23), (n, d)),
+                   np.float32)
+    single = gm_lib.gradmatch(jnp.asarray(g), k)
+    s_idx = np.sort(np.asarray(single.indices)[np.asarray(single.mask)])
+
+    p1 = part_lib.gradmatch_partitioned(g, k, partitions=1, kind="hash")
+    p1_idx = np.sort(np.asarray(p1.indices)[np.asarray(p1.mask)])
+    p1_ok = np.array_equal(p1_idx, s_idx)
+
+    p4 = part_lib.gradmatch_partitioned(g, k, partitions=4, kind="hash")
+    tnorm = float(jnp.sum(jnp.asarray(g).sum(axis=0) ** 2))
+    gap = (float(p4.err) - float(single.err)) / tnorm
+    gap_ok = gap <= gap_tol
+
+    # Per-class: a 6-class pool with one class smaller than its quota and
+    # k % C != 0 — the exact configuration the old split dropped rows on.
+    labels = np.arange(n) % 6
+    labels[labels == 5] = 0
+    labels[:3] = 5                      # class 5 has 3 rows < quota
+    pc = gm_lib.gradmatch_per_class(jnp.asarray(g), jnp.asarray(labels), 6,
+                                    k + 3)
+    pc_count = int(np.asarray(pc.mask).sum())
+    split_ok = pc_count == min(k + 3, n)
+    cls = part_lib.gradmatch_partitioned(g, k + 3, labels=labels,
+                                         num_classes=6)
+    cls_ok = np.array_equal(
+        np.sort(np.asarray(cls.indices)[np.asarray(cls.mask)]),
+        np.sort(np.asarray(pc.indices)[np.asarray(pc.mask)]))
+
+    gs = np.asarray(jax.random.normal(jax.random.PRNGKey(29),
+                                      (scale_n, d)), np.float32)
+
+    def stream_at(p):
+        res = part_lib.gradmatch_partitioned_stream(pool=gs, k=scale_k,
+                                                    partitions=p)
+        jax.block_until_ready(res.weights)
+        return res
+
+    stream_at(1), stream_at(4)                   # warm both shapes
+    t1s, t4s = [], []
+    for _ in range(3):
+        t0 = _time.perf_counter()
+        stream_at(1)
+        t1s.append(_time.perf_counter() - t0)
+        t0 = _time.perf_counter()
+        stream_at(4)
+        t4s.append(_time.perf_counter() - t0)
+    t1, t4 = min(t1s), min(t4s)
+    scale_ok = t4 <= 0.8 * t1
+
+    ok = p1_ok and gap_ok and split_ok and cls_ok and scale_ok
+    print(f"parity_gate,check=partitioned,pool={n},k={k},"
+          f"p1_exact={p1_ok},gap={gap:.4f},gap_tol={gap_tol},"
+          f"per_class_rows={pc_count},split_ok={split_ok},"
+          f"class_exact={cls_ok},p1_ms={t1 * 1e3:.2f},"
+          f"p4_ms={t4 * 1e3:.2f},scale={t1 / max(t4, 1e-9):.2f},"
+          f"scale_ok={scale_ok},ok={ok}", flush=True)
+    return ok
+
+
 def main() -> int:
     ok = check_streaming_parity()
     ok &= check_streaming_overhead()
@@ -359,6 +447,7 @@ def main() -> int:
     ok &= check_greedy_regression()
     ok &= check_serve_smoke()
     ok &= check_fault_recovery()
+    ok &= check_partitioned()
     print(f"parity_gate,{'PASS' if ok else 'FAIL'}", flush=True)
     return 0 if ok else 1
 

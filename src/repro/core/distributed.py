@@ -353,6 +353,63 @@ def fl_greedy_pmap(grads, k: int, valid=None, l_max=None,
     return GreedyResult(indices, mask, picked, cover, stats)
 
 
+# ---------------------------------------------------------------------------
+# device-parallel partition solves (core/partition.py, DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _pmap_partition_solver(k: int, lam: float, eps: float, nnls_iters: int,
+                           method: str, block: int):
+    """pmap'd per-device partition OMP (plain pmap — no shard_map, so it
+    runs on older jax without AxisType; same pattern as ``_pmap_scorer``
+    above).  One device solves one whole partition; partitions are
+    independent problems, so no collective is ever needed."""
+    from repro.core.omp import omp_select
+
+    def local(grads, target, valid):
+        return omp_select(grads, target, k=k, lam=lam, eps=eps,
+                          nnls_iters=nnls_iters, valid=valid,
+                          method=method, block=block)
+
+    return jax.pmap(local, in_axes=(0, 0, 0))
+
+
+def pmap_partition_omp(parts, targets, valids, k: int, lam: float = 0.5,
+                       eps: float = 1e-10, nnls_iters: int = 50,
+                       method: str = "incremental", block: int = 128):
+    """Solve ``P`` independent partition OMPs device-parallel.
+
+    ``parts`` is ``(P, n_max, d)`` padded partition pools, ``targets``
+    ``(P, d)``, ``valids`` ``(P, n_max)`` (padding rows False).  Partitions
+    are dispatched in groups of ``local_device_count``; a ragged tail
+    group is padded by repeating its first partition and the extra solves
+    dropped.  Returns ``(idx, w, mask, err)`` stacked over partitions with
+    *partition-local* row indices — the caller owns the local→global map.
+    """
+    parts = jnp.asarray(parts, jnp.float32)
+    targets = jnp.asarray(targets, jnp.float32)
+    valids = jnp.asarray(valids, bool)
+    ndev = jax.local_device_count()
+    p_total = parts.shape[0]
+    fn = _pmap_partition_solver(int(k), float(lam), float(eps),
+                                int(nnls_iters), str(method), int(block))
+    outs = []
+    for s in range(0, p_total, ndev):
+        g = parts[s:s + ndev]
+        t = targets[s:s + ndev]
+        v = valids[s:s + ndev]
+        got = g.shape[0]
+        if got < ndev:
+            reps = ndev - got
+            g = jnp.concatenate([g, jnp.repeat(g[:1], reps, axis=0)])
+            t = jnp.concatenate([t, jnp.repeat(t[:1], reps, axis=0)])
+            v = jnp.concatenate([v, jnp.repeat(v[:1], reps, axis=0)])
+        idx, w, mask, err = fn(g, t, v)
+        outs.append((idx[:got], w[:got], mask[:got], err[:got]))
+    return tuple(jnp.concatenate([o[i] for o in outs], axis=0)
+                 for i in range(4))
+
+
 def replicate(mesh: Mesh, x: jax.Array) -> jax.Array:
     return jax.device_put(x, NamedSharding(mesh, P()))
 

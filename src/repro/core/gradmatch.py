@@ -19,6 +19,7 @@ from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import omp as omp_lib
 from repro.core import proxies as proxy_lib
@@ -78,16 +79,31 @@ def gradmatch_per_class(
     eps: float = 1e-10,
     method: str = "incremental",
 ) -> SelectionResult:
-    """Paper default: one OMP per class (vmapped), budget split evenly."""
-    k_per_class = max(k // num_classes, 1)
+    """Paper default: one OMP per class, budget split exactly.
+
+    The budget split is Algorithm 1's accounting done right
+    (``omp.split_budget``): the ``k % C`` remainder goes to the largest
+    classes first, each quota is capped at its class size, and capped-off
+    surplus is rebalanced — so the selection holds exactly ``min(k,
+    n_valid)`` rows (rows whose label falls outside ``[0, num_classes)``
+    are not candidates).  ``err`` is the true global objective
+    ``||Σ_c g_tgt_c − Σ w·g||² + λ||w||²`` of the unnormalized per-class
+    solution against the summed target — not a placeholder.
+    """
+    labels_np = np.asarray(labels)
+    in_range = (labels_np >= 0) & (labels_np < num_classes)
+    sizes = np.bincount(labels_np[in_range], minlength=num_classes)
+    quotas = omp_lib.split_budget(k, sizes)
     onehot = jax.nn.one_hot(labels, num_classes, dtype=grads.dtype)  # (n, C)
     targets = onehot.T @ grads                                       # (C, d)
     idx, w, mask = omp_lib.omp_select_per_class(
-        grads, labels, targets, num_classes, k_per_class, lam=lam, eps=eps,
-        method=method,
+        grads, labels, targets, num_classes, 0, lam=lam, eps=eps,
+        method=method, quotas=quotas,
     )
+    err = omp_lib.matching_error(grads, jnp.sum(targets, axis=0), idx, w,
+                                 mask, lam=lam)
     # Per-class weights each sum to ~their class share; renormalize globally.
-    return SelectionResult(idx, _normalize(w, mask), mask, jnp.float32(0.0))
+    return SelectionResult(idx, _normalize(w, mask), mask, err)
 
 
 def gradmatch_pb(
@@ -128,4 +144,4 @@ def expand_batch_selection(
     ex_w = jnp.where(ex_mask, ex_w, 0.0)
     s = jnp.maximum(jnp.sum(ex_w), 1e-12)
     return SelectionResult(ex_idx.astype(jnp.int32), ex_w / s, ex_mask,
-                           sel.err)
+                           sel.err, sel.stats)

@@ -53,10 +53,11 @@ small problem solved in VMEM-resident registers.
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
+from typing import NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 from repro.kernels import ops
@@ -770,6 +771,40 @@ def omp_select_batched(
                                            block)
 
 
+def split_budget(k: int, sizes: Sequence[int]) -> np.ndarray:
+    """Split a global budget ``k`` across partitions of the given sizes.
+
+    Paper Algorithm 1's per-class accounting, done exactly: an even split
+    with the ``k % P`` remainder going to the largest partitions first,
+    every quota capped at its partition size, and capped-off surplus
+    rebalanced over the partitions that still have capacity — iterated
+    until the budget is placed.  Guarantees ``sum(quota) == min(k,
+    sum(sizes))`` and ``quota[p] <= sizes[p]`` for every partition.
+
+    Host-side (numpy) on purpose: quotas are static solver shapes.
+    """
+    sizes = np.asarray(sizes, np.int64)
+    if sizes.ndim != 1 or sizes.shape[0] == 0:
+        raise ValueError(f"sizes must be a non-empty 1-D sequence, got "
+                         f"shape {sizes.shape}")
+    if (sizes < 0).any():
+        raise ValueError(f"negative partition size in {sizes}")
+    quota = np.zeros(sizes.shape[0], np.int64)
+    remaining = min(int(k), int(sizes.sum()))
+    # Largest-first order, ties broken by partition id for determinism.
+    order = np.argsort(-sizes, kind="stable")
+    while remaining > 0:
+        cap = sizes - quota
+        act = order[cap[order] > 0]
+        base, rem = divmod(remaining, len(act))
+        add = np.full(len(act), base, np.int64)
+        add[:rem] += 1                      # remainder to largest first
+        add = np.minimum(add, cap[act])
+        quota[act] += add
+        remaining -= int(add.sum())
+    return quota
+
+
 def omp_select_per_class(
     grads: jax.Array,        # (n, d)
     labels: jax.Array,       # (n,) int class ids
@@ -779,22 +814,67 @@ def omp_select_per_class(
     lam: float = 0.5,
     eps: float = 1e-10,
     method: str = "incremental",
+    quotas: Optional[Sequence[int]] = None,   # (C,) per-class budgets
+    nnls_iters: int = 50,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Paper's per-class decomposition, batched over classes with vmap.
 
     Each class-c problem only sees candidates with label c (others masked
     invalid).  Returns flattened (num_classes*k, ...) padded arrays.
+
+    ``quotas`` gives each class its own round budget (``split_budget``'s
+    output; ``k_per_class`` is ignored then, the vmap runs ``max(quotas)``
+    rounds for every class so shapes stay static).  Class ``c`` keeps the
+    first ``quotas[c]`` rounds — index-exact by the greedy prefix
+    property: round ``t`` of OMP only depends on rounds ``< t``, so the
+    truncated prefix equals a fresh ``quotas[c]``-round solve — and its
+    weights are re-solved by one NNLS on the truncated active set (the
+    full-budget weights are *not* the prefix weights).
     """
 
-    def one_class(c, target):
+    if quotas is None:
+        def one_class(c, target):
+            valid = labels == c
+            idx, w, mask, _ = omp_select(
+                grads, target, k=k_per_class, lam=lam, eps=eps, valid=valid,
+                method=method,
+            )
+            return idx, w, mask
+
+        idx, w, mask = jax.vmap(one_class)(jnp.arange(num_classes), targets)
+        return idx.reshape(-1), w.reshape(-1), mask.reshape(-1)
+
+    quotas = np.asarray(quotas, np.int64)
+    if quotas.shape != (num_classes,):
+        raise ValueError(
+            f"quotas must be ({num_classes},), got {quotas.shape}")
+    k_cap = int(quotas.max()) if quotas.size else 0
+    if k_cap == 0:                      # empty budget: all-off result
+        z = jnp.zeros((0,))
+        return (z.astype(jnp.int32), z.astype(jnp.float32),
+                z.astype(bool))
+    quotas_j = jnp.asarray(quotas, jnp.int32)
+    slot = jnp.arange(k_cap, dtype=jnp.int32)
+
+    def one_class(c, target, quota):
         valid = labels == c
-        idx, w, mask, _ = omp_select(
-            grads, target, k=k_per_class, lam=lam, eps=eps, valid=valid,
+        idx, _, mask, _ = omp_select(
+            grads, target, k=k_cap, lam=lam, eps=eps, valid=valid,
             method=method,
         )
-        return idx, w, mask
+        mask = mask & (slot < quota)
+        idx = jnp.where(mask, idx, -1)
+        # Exact reweight of the truncated prefix: one NNLS over the
+        # quota-sized active set against the class target.
+        sel = jnp.where(mask, idx, 0)
+        g_s = grads[sel] * mask[:, None].astype(grads.dtype)
+        gram = g_s @ g_s.T
+        corr = g_s @ target.astype(grads.dtype)
+        w = _nnls_active(gram, corr, mask, lam, nnls_iters)
+        return idx, jnp.where(mask, w, 0.0), mask
 
-    idx, w, mask = jax.vmap(one_class)(jnp.arange(num_classes), targets)
+    idx, w, mask = jax.vmap(one_class)(jnp.arange(num_classes), targets,
+                                       quotas_j)
     return idx.reshape(-1), w.reshape(-1), mask.reshape(-1)
 
 

@@ -28,20 +28,26 @@ import jax.numpy as jnp
 from repro.core import craig as craig_lib
 from repro.core import glister as glister_lib
 from repro.core import gradmatch as gm_lib
+from repro.core import partition as part_lib
 from repro.core import proxies as proxy_lib
 from repro.core import random_sel
 from repro.core import streaming as stream_lib
 from repro.core.gradmatch import SelectionResult
 
-STRATEGIES = ("gradmatch", "gradmatch-stream", "gradmatch-pb", "craig",
-              "craig-lazy", "craig-stochastic", "craig-pb", "glister",
-              "random", "full")
+STRATEGIES = ("gradmatch", "gradmatch-stream", "gradmatch-partitioned",
+              "gradmatch-pb", "craig", "craig-lazy", "craig-lazy-otf",
+              "craig-stochastic", "craig-pb", "glister", "random", "full")
 
-# CRAIG tiers: the dense oracle and the two fast greedy modes of the
-# shared engine (core/greedy.py).  "craig-lazy" selects index-identically
-# to "craig"; "craig-stochastic" is the seeded approximate tier.
+# CRAIG tiers: the dense oracle and the fast greedy modes of the shared
+# engine (core/greedy.py).  "craig-lazy" selects index-identically to
+# "craig"; "craig-lazy-otf" is the same certified lazy greedy with the
+# similarity tiled from the gradients on the fly — index-identical again
+# (FL gains are shift-invariant in l_max) at O(1) similarity memory;
+# "craig-stochastic" is the seeded approximate tier.
 _CRAIG_METHODS = {"craig": "dense", "craig-lazy": "lazy",
+                  "craig-lazy-otf": "lazy",
                   "craig-stochastic": "stochastic"}
+_CRAIG_ON_THE_FLY = frozenset({"craig-lazy-otf"})
 
 
 def select(
@@ -60,6 +66,7 @@ def select(
     chunk_size: int = 2048,            # gradmatch-stream: pool chunk rows
     stream_buffer: int = 256,          # gradmatch-stream: top-M buffer slots
     stream_cache_bytes: int = stream_lib.DEFAULT_CACHE_BYTES,
+    partitions: int = 0,               # gradmatch-partitioned: P (0 = auto)
 ) -> SelectionResult:
     """Resolve one selection round.  ``val_target`` switches isValid=True.
 
@@ -117,13 +124,28 @@ def select(
             proxies, k, target=val_target, lam=lam, eps=eps,
             chunk_size=chunk_size, buffer_size=stream_buffer,
             cache_bytes=stream_cache_bytes)
+    if strategy == "gradmatch-partitioned":
+        # Partition-and-merge sharded selection (core/partition.py,
+        # DESIGN.md §9): per-class partitions when the per-class mode
+        # applies (mirroring "gradmatch"), hashed partitions otherwise;
+        # out-of-core pools go through
+        # ``partition.gradmatch_partitioned_stream`` directly.
+        use_labels = (per_class and labels is not None and num_classes > 1
+                      and val_target is None)
+        return part_lib.gradmatch_partitioned(
+            proxies, k, partitions=partitions,
+            labels=labels if use_labels else None,
+            num_classes=num_classes if use_labels else 0,
+            target=val_target, lam=lam, eps=eps, method=omp_method)
     if strategy == "gradmatch-pb":
         return gm_lib.gradmatch_pb(
             proxies, batch_size, max(k // batch_size, 1), lam=lam, eps=eps,
             target=val_target, method=omp_method)
     if strategy in _CRAIG_METHODS:
         return craig_lib.craig(proxies, k, method=_CRAIG_METHODS[strategy],
-                               key=key)
+                               key=key,
+                               on_the_fly=(True if strategy in
+                                           _CRAIG_ON_THE_FLY else None))
     if strategy == "craig-pb":
         return craig_lib.craig_pb(proxies, batch_size,
                                   max(k // batch_size, 1))

@@ -156,6 +156,47 @@ def chunked_pool_iter(pool, valid=None) -> Callable[[], Iterator]:
     return chunks
 
 
+def subrange_chunks(pool_iter: Callable[[], Iterator], lo: int,
+                    hi: int) -> Callable[[], Iterator]:
+    """Clip a chunk factory to the global row range ``[lo, hi)``.
+
+    The partition solver's per-partition view of a shared loader: chunk
+    boundaries need not align with the range — straddling chunks are
+    sliced — and a fresh iterator walks the same sub-chunks in the same
+    order on every call (the streaming engine's determinism contract),
+    because the parent factory's order is deterministic and the clipping
+    is pure arithmetic on its offsets.  Row ids inside the view are
+    partition-local; add ``lo`` to map a pick back to a global id.
+    """
+    lo, hi = int(lo), int(hi)
+
+    def chunks():
+        off = 0
+        for chunk, v in pool_iter():
+            c = chunk.shape[0]
+            if off + c > lo:
+                s = max(lo - off, 0)
+                e = min(hi - off, c)
+                if s < e:
+                    yield chunk[s:e], (None if v is None else v[s:e])
+            off += c
+            if off >= hi:
+                break
+
+    return chunks
+
+
+def offset_row_fetch(row_fetch: Callable, lo: int) -> Callable:
+    """Shift an exact-row fetcher into a ``subrange_chunks`` view: local
+    id ``i`` fetches global row ``lo + i``."""
+    lo = int(lo)
+
+    def fetch(ids):
+        return row_fetch(np.asarray(ids, np.int64) + lo)
+
+    return fetch
+
+
 def streaming_target(pool_iter: Callable[[], Iterator],
                      cache: "ChunkCache | None" = None,
                      retry: "RetryPolicy | None" = None):

@@ -92,6 +92,10 @@ class PoolEntry:
     cache: Optional[stream_lib.ChunkCache] = field(default=None,
                                                    repr=False)
     row_fetch: Optional[Callable] = field(default=None, repr=False)
+    # Partition count for "gradmatch-partitioned" requests against this
+    # pool (core/partition.py, DESIGN.md §9); 0 = the solver's auto
+    # sizing (~128k rows per partition for chunked pools).
+    partitions: int = 0
     # CRAIG scan cache, resolved lazily on the first craig request:
     _fl: Optional[tuple] = field(default=None, repr=False)
 
@@ -122,12 +126,13 @@ class PoolRegistry:
 
     # -- admission -----------------------------------------------------------
     def register(self, pool, pool_id: Optional[str] = None,
-                 valid=None) -> str:
+                 valid=None, partitions: int = 0) -> str:
         """Admit an in-memory ``(n, d)`` proxy pool; returns its id.
 
         Re-registering content with a known fingerprint returns the
         existing id (no second device copy) unless an explicit distinct
-        ``pool_id`` is given.
+        ``pool_id`` is given.  ``partitions`` configures how
+        "gradmatch-partitioned" requests split this pool (0 = auto).
         """
         x = np.asarray(pool, np.float32)
         if x.ndim != 2 or x.shape[0] == 0:
@@ -144,7 +149,7 @@ class PoolRegistry:
         entry = PoolEntry(
             pool_id=pid, kind="array", n=x.shape[0], d=x.shape[1],
             fingerprint=fp, grads=g, valid=v,
-            target_sum=jnp.sum(gv, axis=0),
+            target_sum=jnp.sum(gv, axis=0), partitions=int(partitions),
         )
         self._admit(pid, fp, entry)
         return pid
@@ -152,7 +157,7 @@ class PoolRegistry:
     def register_chunked(self, pool, pool_id: Optional[str] = None,
                          valid=None,
                          cache_bytes: int = stream_lib.DEFAULT_CACHE_BYTES,
-                         retry=None) -> str:
+                         retry=None, partitions: int = 0) -> str:
         """Admit a ``ChunkedPool`` (or any ``(chunk, valid)`` factory).
 
         The default target is computed with one summing pass now — and
@@ -195,7 +200,8 @@ class PoolRegistry:
         entry = PoolEntry(pool_id=pid, kind="chunked", n=int(n),
                           d=int(target.shape[0]), fingerprint=fp,
                           chunk_iter=chunk_iter, target_sum=target,
-                          cache=cache, row_fetch=row_fetch)
+                          cache=cache, row_fetch=row_fetch,
+                          partitions=int(partitions))
         self._admit(pid, fp, entry)
         return pid
 

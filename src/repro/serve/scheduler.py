@@ -45,6 +45,7 @@ import numpy as np
 
 from repro.core import craig as craig_lib
 from repro.core import glister as glister_lib
+from repro.core import partition as part_lib
 from repro.core import random_sel
 from repro.core import streaming as stream_lib
 from repro.core.gradmatch import SelectionResult, _normalize
@@ -56,8 +57,8 @@ from repro.resilience.recovery import RetryPolicy
 from repro.serve.admission import AdmissionController, estimate_cost
 from repro.serve.registry import PoolEntry, PoolRegistry, UnknownPool
 
-SERVABLE = ("gradmatch", "craig", "craig-lazy", "craig-stochastic",
-            "glister", "random")
+SERVABLE = ("gradmatch", "gradmatch-partitioned", "craig", "craig-lazy",
+            "craig-stochastic", "glister", "random")
 
 _CRAIG_METHODS = {"craig": "dense", "craig-lazy": "lazy",
                   "craig-stochastic": "stochastic"}
@@ -386,6 +387,32 @@ class RequestScheduler:
                 retry=self.retry,
                 checkpoint_dir=self._checkpoint_dir(entry, req, target),
                 checkpoint_every=self.checkpoint_every)
+        if req.strategy == "gradmatch-partitioned":
+            # Partition-and-merge (core/partition.py, DESIGN.md §9): the
+            # pool's registered partition count (0 = solver auto) shapes
+            # the split; chunked pools stream contiguous row ranges
+            # through the certified engine, resident pools solve hashed
+            # partitions device-parallel.
+            target = (None if req.target is None
+                      else jnp.asarray(req.target, jnp.float32))
+            if entry.kind == "chunked":
+                if req.valid is not None:
+                    raise ValueError(
+                        "per-request valid masks are not supported on "
+                        "chunked pools — register the pool with the mask "
+                        "instead")
+                return part_lib.gradmatch_partitioned_stream(
+                    pool_iter=entry.chunk_iter, k=req.k, n=entry.n,
+                    partitions=entry.partitions, row_fetch=entry.row_fetch,
+                    target=target, lam=req.lam, eps=req.eps,
+                    buffer_size=self.stream_buffer, retry=self.retry)
+            valid = entry.valid
+            if req.valid is not None:
+                v = jnp.asarray(req.valid, bool)
+                valid = v if valid is None else (valid & v)
+            return part_lib.gradmatch_partitioned(
+                entry.grads, req.k, partitions=entry.partitions,
+                target=target, lam=req.lam, eps=req.eps, valid=valid)
         if entry.kind != "array":
             raise ValueError(
                 f"strategy {req.strategy!r} needs a resident pool")

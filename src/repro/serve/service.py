@@ -76,8 +76,9 @@ class SelectionService:
 
     # -- pools ---------------------------------------------------------------
     def register_pool(self, pool, pool_id: Optional[str] = None,
-                      valid=None) -> str:
-        return self.registry.register(pool, pool_id=pool_id, valid=valid)
+                      valid=None, **kw) -> str:
+        return self.registry.register(pool, pool_id=pool_id, valid=valid,
+                                      **kw)
 
     def register_chunked_pool(self, pool, pool_id: Optional[str] = None,
                               valid=None, **kw) -> str:

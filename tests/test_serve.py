@@ -244,6 +244,29 @@ def test_chunked_pool_served_via_streaming():
         svc.open_session(pid, k=8)
 
 
+def test_partitioned_strategy_served_both_pool_kinds():
+    from repro.core import partition as part_lib
+    g = _pool(55, 400, 16)
+    svc = _service()
+    # Array pool: hashed partition-and-merge, matches the library path.
+    pid = svc.register_pool(g, partitions=3)
+    t = svc.submit(pid, k=20, strategy="gradmatch-partitioned")
+    svc.drain()
+    assert t.status == "done" and t.degradation == "certified"
+    lib = part_lib.gradmatch_partitioned(g, 20, partitions=3)
+    np.testing.assert_array_equal(np.asarray(t.result.indices),
+                                  np.asarray(lib.indices))
+    # Chunked pool: contiguous ranges through the streaming engine.
+    pid2 = svc.register_chunked_pool(ChunkedPool(g, chunk_size=96),
+                                     partitions=4)
+    assert svc.registry.get(pid2).partitions == 4
+    res = svc.select(pid2, k=20, strategy="gradmatch-partitioned")
+    lib2 = part_lib.gradmatch_partitioned_stream(pool=g, k=20, partitions=4)
+    np.testing.assert_array_equal(np.asarray(res.indices),
+                                  np.asarray(lib2.indices))
+    assert res.stats.num_parts == 4 and res.stats.stream is not None
+
+
 # ---------------------------------------------------------------------------
 # admission / backpressure
 # ---------------------------------------------------------------------------
