@@ -35,6 +35,11 @@ Checks, all against artifacts committed in the repo:
    objective tolerance of the single solver, and the streaming solve
    must scale near-linearly in P (t(P=4) <= 0.8 t(P=1), interleaved
    min-of-3).
+7. **Serve under load** (DESIGN.md §10): a fixed-seed open-loop burst
+   must drain through the overload-aware service at >= 5x the
+   sequential baseline's sustained req/s with p99 within the SLO, both
+   runs clean on the shed-accounting invariants; an undersized service
+   must shed best-effort traffic — labelled, never charged.
 
 Exit code 0 = gate passed.  ``python -m benchmarks.parity_gate``
 """
@@ -277,6 +282,94 @@ def check_serve_smoke() -> bool:
     return bool(report["ok"])
 
 
+def check_serve_load(n=4096, d=256, ks=(48, 96), requests=40,
+                     min_speedup=5.0, slo_factor=25.0) -> bool:
+    """Overload-resilience gate (DESIGN.md §10): a fixed-seed open-loop
+    burst must drain through the overload-aware service at >=
+    ``min_speedup`` x the sequential baseline's sustained req/s, with
+    p99 within the SLO (``slo_factor`` x one sequential solve), both
+    runs clean on the load harness's accounting invariants (admitted ==
+    completed + shed + failed, in-flight slots returned, refunds
+    exactly once).  A second deliberately-undersized run must *shed* —
+    labelled, never charged — with the same invariants intact.
+
+    Throughput is gated as a same-machine ratio (sequential and loaded
+    are timed in the same process on the same trace), so the gate is
+    machine-independent like the other perf checks."""
+    from repro.serve import (LoadSpec, SelectionService, SimClock,
+                             make_arrivals, run_load)
+
+    pool = np.asarray(jax.random.normal(jax.random.PRNGKey(31), (n, d)),
+                      np.float32)
+
+    def build(max_batch, overload, max_queue, brownout_at=0.4):
+        clock = SimClock()
+        svc = SelectionService(
+            max_batch=max_batch, max_queue=max_queue,
+            max_inflight_per_tenant=2 * requests, clock=clock.now,
+            overload=overload, brownout_at=brownout_at,
+            overload_at=0.85, recover_at=0.1)
+        pid = svc.register_pool(pool, pool_id="gate-pool")
+        for k in ks:
+            svc.select(pid, k=k)                 # jit warm, off the trace
+        if max_batch > 1:
+            svc.submit(pid, k=ks[0])
+            svc.submit(pid, k=ks[0])
+            svc.drain()
+            sid, _ = svc.open_session(pid, k=max(ks))
+            svc.close_session(sid)
+        return clock, svc, pid
+
+    def trace(pid, **kw):
+        return make_arrivals(LoadSpec(
+            seed=13, requests=requests, rate_rps=1e6, pools=(pid,),
+            ks=tuple(ks), **kw))
+
+    clock, svc, pid = build(1, False, 2 * requests)
+    seq = run_load(svc, trace(pid), clock)
+    # max_queue == the burst size: the whole trace drains under
+    # brownout (the regime this gate is about), so every group goes
+    # through the shared anytime session instead of recovering to the
+    # cold-bucket batched path mid-trace.
+    clock, svc, pid = build(16, True, requests)
+    loaded = run_load(svc, trace(pid), clock)
+
+    speedup = loaded.sustained_rps / max(seq.sustained_rps, 1e-9)
+    per_req_seq = seq.duration_s / max(seq.completed, 1)
+    slo_ms = slo_factor * per_req_seq * 1e3
+    clean = (seq.violations == [] and loaded.violations == []
+             and seq.completed == requests
+             and loaded.completed == requests)
+    speed_ok = speedup >= min_speedup
+    slo_ok = loaded.p99_ms <= slo_ms
+
+    # Undersized service: the burst must brown out and shed best-effort
+    # traffic with the accounting invariants still holding.
+    clock, svc, pid = build(8, True, max_queue=8, brownout_at=0.25)
+    shed_rep = run_load(
+        svc, trace(pid, tenants=("a", "b"),
+                   priorities=("interactive", "best-effort"),
+                   priority_weights=(1, 1)),
+        clock)
+    c = svc.scheduler.counters
+    shed_ok = (shed_rep.violations == [] and shed_rep.shed > 0
+               and c["admitted"] == c["completed"] + c["shed"]
+               + c["failed"]
+               and all(r["ticket"].degradation == "shed"
+                       for r in shed_rep.records
+                       if r["ticket"].status == "shed"))
+
+    ok = clean and speed_ok and slo_ok and shed_ok
+    print(f"parity_gate,check=serve-load,pool={n},requests={requests},"
+          f"seq_rps={seq.sustained_rps:.2f},"
+          f"loaded_rps={loaded.sustained_rps:.2f},"
+          f"speedup={speedup:.2f},min={min_speedup},"
+          f"p99_ms={loaded.p99_ms:.1f},slo_ms={slo_ms:.1f},"
+          f"shed={shed_rep.shed},invariants_ok={clean and shed_ok},"
+          f"ok={ok}", flush=True)
+    return ok
+
+
 def check_fault_recovery(n=4096, d=64, k=128, chunk=512, rate=0.15,
                          seed=11, overhead_budget=1.5) -> bool:
     """Fault-recovery gate (DESIGN.md §8): under seeded transient faults
@@ -446,6 +539,7 @@ def main() -> int:
     ok &= check_greedy_parity()
     ok &= check_greedy_regression()
     ok &= check_serve_smoke()
+    ok &= check_serve_load()
     ok &= check_fault_recovery()
     ok &= check_partitioned()
     print(f"parity_gate,{'PASS' if ok else 'FAIL'}", flush=True)

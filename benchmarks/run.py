@@ -19,8 +19,8 @@ import traceback
 
 from benchmarks.common import persist
 
-SECTIONS = ("kernels", "grad_error", "selection", "tradeoff", "redundant",
-            "ablations", "roofline")
+SECTIONS = ("kernels", "grad_error", "selection", "serve_load",
+            "tradeoff", "redundant", "ablations", "roofline")
 
 
 def main(argv=None) -> int:
@@ -49,12 +49,15 @@ def main(argv=None) -> int:
 
     from benchmarks import (bench_ablations, bench_grad_error,
                             bench_kernels, bench_redundant,
-                            bench_selection, bench_tradeoff, roofline)
+                            bench_selection, bench_serve_load,
+                            bench_tradeoff, roofline)
 
     section("kernels", lambda: bench_kernels.main(quick=args.quick),
             persist_as="kernels")
     section("grad_error", lambda: bench_grad_error.main(quick=args.quick))
     section("selection", lambda: bench_selection.main(quick=args.quick),
+            persist_as="selection")
+    section("serve_load", lambda: bench_serve_load.main(quick=args.quick),
             persist_as="selection")
     section("tradeoff", lambda: bench_tradeoff.main(quick=args.quick))
     section("redundant", lambda: bench_redundant.main(quick=args.quick))

@@ -220,18 +220,7 @@ def streaming_target(pool_iter: Callable[[], Iterator],
                 c = c * jnp.asarray(v)[:, None].astype(jnp.float32)
             s = jnp.sum(c, axis=0)
             total = s if total is None else total + s
-            if cache is not None:
-                cpad = _bucket(chunk.shape[0])
-                ch = jnp.asarray(chunk, jnp.float32)
-                if cpad != chunk.shape[0]:
-                    ch = jnp.pad(ch, ((0, cpad - chunk.shape[0]), (0, 0)))
-                ok = jnp.arange(cpad) < chunk.shape[0]
-                if v is not None:
-                    ok = ok & jnp.pad(jnp.asarray(v, bool),
-                                      (0, cpad - chunk.shape[0]))
-                gids = jnp.where(jnp.arange(cpad) < chunk.shape[0],
-                                 n + jnp.arange(cpad, dtype=jnp.int32), -1)
-                cache.offer(idx, n, chunk.shape[0], ch, ok, gids)
+            offer_chunk(cache, idx, n, chunk, v)
             n += chunk.shape[0]
             idx += 1
         return total, n, idx
@@ -253,6 +242,29 @@ def _bucket(c: int) -> int:
     while p < c:
         p *= 2
     return p
+
+
+def offer_chunk(cache: "ChunkCache | None", idx: int, offset: int,
+                chunk, v) -> None:
+    """Offer one ``(chunk, valid)`` pair to the compressed cache: pad the
+    chunk to its power-of-two bucket, build the ok-mask and global row
+    ids for rows ``[offset, offset + len(chunk))``, and hand it to
+    ``cache.offer``.  The warming-pass body, shared by the one-shot
+    ``streaming_target`` scan and the registry's incremental
+    (deferred-warm) admission so the two can never drift."""
+    if cache is None:
+        return
+    c = chunk.shape[0]
+    cpad = _bucket(c)
+    ch = jnp.asarray(chunk, jnp.float32)
+    if cpad != c:
+        ch = jnp.pad(ch, ((0, cpad - c), (0, 0)))
+    ok = jnp.arange(cpad) < c
+    if v is not None:
+        ok = ok & jnp.pad(jnp.asarray(v, bool), (0, cpad - c))
+    gids = jnp.where(jnp.arange(cpad) < c,
+                     offset + jnp.arange(cpad, dtype=jnp.int32), -1)
+    cache.offer(idx, offset, c, ch, ok, gids)
 
 
 # ---------------------------------------------------------------------------

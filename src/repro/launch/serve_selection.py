@@ -14,7 +14,16 @@ correctness claims the service makes and exits non-zero on violation:
 * the ``k -> k'`` session continuation is index-identical to a one-shot
   ``k'`` solve.
 
+``--load`` switches the driver to the open-loop overload scenario
+(DESIGN.md §10): seeded Poisson arrivals from two tenants with unequal
+offered load and weights, a priority mix, and one fault-injected chunked
+pool, driven on a virtual clock through the overload-aware scheduler.
+It prints per-tenant p99, the degradation-rung distribution, the
+weighted fairness ratio and the shed/refund accounting, and exits
+non-zero if any accounting invariant is violated.
+
 Run:  PYTHONPATH=src python -m repro.launch.serve_selection --smoke
+      PYTHONPATH=src python -m repro.launch.serve_selection --load
 """
 
 from __future__ import annotations
@@ -44,11 +53,21 @@ def main(argv=None) -> dict:
     ap.add_argument("--tenants", type=int, default=2)
     ap.add_argument("--max-batch", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--load", action="store_true",
+                    help="open-loop overload scenario (DESIGN.md §10)")
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="arrival rate in req/s for --load "
+                         "(0 = one saturating burst)")
+    ap.add_argument("--fault-rate", type=float, default=0.15,
+                    help="transient fault rate on the chunked pool "
+                         "(--load)")
     args = ap.parse_args(argv)
     if args.smoke:
         args.pool_size = min(args.pool_size, 1024)
         args.k = min(args.k, 64)
         args.k_extend = min(args.k_extend, 96)
+    if args.load:
+        return _run_load(args)
 
     svc = SelectionService(max_batch=args.max_batch,
                           max_queue=max(args.requests * 2, 16))
@@ -119,6 +138,85 @@ def main(argv=None) -> dict:
         "extension_ok": extension_ok,
         "failures": failures,
         "ok": not failures,
+    }
+    print(report)
+    return report
+
+
+def _run_load(args) -> dict:
+    """Open-loop overload scenario: two tenants with unequal offered
+    load and weights, a priority mix, one healthy resident pool and one
+    fault-injected chunked pool."""
+    from repro.core import streaming as stream_lib
+    from repro.data.loader import ChunkedPool
+    from repro.resilience import (FaultPlan, FaultyChunkIterator,
+                                  RetryPolicy)
+    from repro.serve import LoadSpec, SimClock, make_arrivals, run_load
+
+    n = args.pool_size
+    requests = max(args.requests, 24) if args.requests == 8 \
+        else args.requests
+    if args.smoke:
+        n, requests = min(n, 1024), min(requests, 16)
+    k_small = max(args.k // 2, 4)
+    ks = (k_small, args.k)
+    retry = RetryPolicy(max_retries=25, backoff_s=0.0,
+                        sleep=lambda s: None)
+    clock = SimClock()
+    svc = SelectionService(
+        max_batch=args.max_batch, max_queue=max(2 * requests, 16),
+        max_inflight_per_tenant=2 * requests, clock=clock.now,
+        retry_policy=retry, brownout_at=0.4, overload_at=0.85,
+        recover_at=0.1)
+    # team-a: 2/3 of the offered load at weight 2; team-b: 1/3 at
+    # weight 1 — unequal load *and* unequal entitlement, so the
+    # fairness ratio below is about weighted shares, not raw counts.
+    svc.admission.set_weight("team-a", 2.0)
+    svc.admission.set_weight("team-b", 1.0)
+    rng = np.random.default_rng(args.seed)
+    g = rng.standard_normal((n, args.dim)).astype(np.float32)
+    g_ch = rng.standard_normal((n, args.dim)).astype(np.float32)
+    pid = svc.register_pool(g, pool_id="load-resident")
+    faulty = FaultyChunkIterator(
+        stream_lib.chunked_pool_iter(ChunkedPool(g_ch,
+                                                 chunk_size=max(n // 8,
+                                                                64))),
+        FaultPlan(transient_rate=args.fault_rate, seed=args.seed))
+    pid_ch = svc.register_chunked_pool(faulty, pool_id="load-chunked")
+    for k in ks:                                   # jit warm off-trace
+        svc.select(pid, k=k)
+        svc.select(pid_ch, k=k)
+    sid, _ = svc.open_session(pid, k=max(ks))
+    svc.close_session(sid)
+
+    spec = LoadSpec(
+        seed=args.seed, requests=requests,
+        rate_rps=args.rate if args.rate > 0 else 1e6,
+        pools=(pid, pid_ch), pool_weights=(3, 1), ks=ks,
+        tenants=("team-a", "team-b"), tenant_weights=(2, 1),
+        priorities=("interactive", "batch", "best-effort"),
+        priority_weights=(5, 3, 2))
+    rep = run_load(svc, make_arrivals(spec), clock)
+
+    report = {
+        "mode": "load",
+        "requests": rep.requests,
+        "completed": rep.completed,
+        "shed": rep.shed,
+        "failed": rep.failed,
+        "rejected": rep.rejected,
+        "sustained_rps": round(rep.sustained_rps, 2),
+        "p50_ms": round(rep.p50_ms, 2),
+        "p99_ms": round(rep.p99_ms, 2),
+        "tenant_p99_ms": {t: round(v, 2)
+                          for t, v in sorted(rep.tenant_p99_ms.items())},
+        "rungs": dict(sorted(rep.rungs.items())),
+        "fairness_ratio": (None if rep.fairness_ratio is None
+                           else round(rep.fairness_ratio, 3)),
+        "faults_injected": dict(faulty.injected),
+        "overload": svc.scheduler.stats()["overload"],
+        "violations": rep.violations,
+        "ok": rep.ok and rep.completed > 0,
     }
     print(report)
     return report

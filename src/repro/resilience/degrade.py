@@ -12,12 +12,21 @@ passing a weaker answer off as certified:
                     mid-solve checkpoint of a failed attempt — the
                     answer is still bit-identical to fault-free, the
                     label records that recovery did the work.
+``prefix-shared``   brownout rung: the answer is the first-k prefix of a
+                    *shared* anytime session solved once for a group of
+                    same-pool differing-k requests — indices certified
+                    bit-exact vs the one-shot k solve by the prefix
+                    property, weights renormalized (approximate).
 ``anytime-prefix``  first-k prefix of a live anytime session on the same
                     pool content: indices certified by the prefix
                     property, weights renormalized (approximate).
-``stochastic``      seeded stochastic-greedy OMP over the rows resident
-                    in the pool's compressed chunk cache — an in-memory
-                    solve over a subsample, clearly approximate.
+``stochastic``      seeded stochastic-greedy OMP over a subsample — of
+                    the rows resident in the pool's compressed chunk
+                    cache (chunked pools), or of the pool matrix itself
+                    (array pools under overload) — clearly approximate.
+``shed``            no solve at all: the overload controller rejected
+                    the request at submit to protect higher-priority
+                    work; the ticket is labelled, never silently dropped.
 ``timeout``/``failed``  no answer: deadline expired before work started,
                     or every rung failed.
 """
@@ -34,8 +43,9 @@ class DeadlineExceeded(RuntimeError):
     """The request's deadline expired before a solve could start."""
 
 
-DEGRADE_LEVELS = ("certified", "resumed", "anytime-prefix", "stochastic",
-                  "timeout", "failed")
+DEGRADE_LEVELS = ("certified", "resumed", "prefix-shared",
+                  "anytime-prefix", "stochastic", "shed", "timeout",
+                  "failed")
 
 
 def stochastic_fallback(cache, target, k: int, seed: int = 0,
@@ -75,5 +85,45 @@ def stochastic_fallback(cache, target, k: int, seed: int = 0,
     m = np.asarray(mask)
     global_idx = np.where(m, gids[pick[np.clip(local, 0, sample - 1)]], -1)
     from repro.core.gradmatch import SelectionResult
+    return SelectionResult(jnp.asarray(global_idx, jnp.int32), w,
+                           jnp.asarray(m), err)
+
+
+def stochastic_pool_select(grads, target, k: int, seed: int = 0,
+                           lam: float = 0.5, eps: float = 1e-10,
+                           positive: bool = True, valid=None,
+                           sample_factor: int = 4,
+                           min_sample: int = 256):
+    """The stochastic rung for *array* pools (the overload brownout's
+    floor): seeded subsample of the valid rows, in-memory OMP over the
+    subsample, indices mapped back to global row ids.
+
+    Same contract as ``stochastic_fallback`` but over a resident ``(n,
+    d)`` matrix instead of a chunk cache — O(sample·d·k) instead of the
+    full O(n·d·k) solve, which is the whole point under overload.
+    Returns ``None`` when no valid rows exist.
+    """
+    from repro.core import omp as omp_lib
+    from repro.core.gradmatch import SelectionResult
+
+    g = jnp.asarray(grads, jnp.float32)
+    n = int(g.shape[0])
+    if valid is not None:
+        pos = np.flatnonzero(np.asarray(valid, bool))
+    else:
+        pos = np.arange(n)
+    if pos.size == 0:
+        return None
+    sample = min(max(int(sample_factor) * int(k), int(min_sample)),
+                 int(pos.size))
+    rng = np.random.default_rng(int(seed))
+    pick = np.sort(rng.choice(pos, size=sample, replace=False))
+    rows = g[jnp.asarray(pick)]
+    idx, w, mask, err = omp_lib.omp_select(
+        rows, jnp.asarray(target, jnp.float32), int(k), lam=lam, eps=eps,
+        positive=positive)
+    local = np.asarray(idx)
+    m = np.asarray(mask)
+    global_idx = np.where(m, pick[np.clip(local, 0, sample - 1)], -1)
     return SelectionResult(jnp.asarray(global_idx, jnp.int32), w,
                            jnp.asarray(m), err)

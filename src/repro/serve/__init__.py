@@ -11,17 +11,22 @@ from repro.resilience.circuit import (BreakerBoard, CircuitBreaker,
 from repro.resilience.degrade import DEGRADE_LEVELS, DeadlineExceeded
 from repro.resilience.recovery import RetryExhausted, RetryPolicy
 from repro.serve.admission import (AdmissionController, AdmissionError,
-                                   BudgetExhausted, QueueFull,
-                                   estimate_cost)
+                                   BudgetExhausted, OverloadController,
+                                   QueueFull, estimate_cost)
+from repro.serve.loadgen import (Arrival, LoadReport, LoadSpec, SimClock,
+                                 make_arrivals, run_load)
 from repro.serve.registry import PoolEntry, PoolRegistry, UnknownPool
-from repro.serve.scheduler import RequestScheduler, SelectRequest, Ticket
+from repro.serve.scheduler import (PRIORITIES, RequestScheduler,
+                                   SelectRequest, Ticket)
 from repro.serve.service import SelectionService
 from repro.serve.sessions import Session, SessionGone, SessionStore
 
 __all__ = [
-    "AdmissionController", "AdmissionError", "BreakerBoard",
+    "AdmissionController", "AdmissionError", "Arrival", "BreakerBoard",
     "BudgetExhausted", "CircuitBreaker", "CircuitOpen", "DEGRADE_LEVELS",
-    "DeadlineExceeded", "QueueFull", "estimate_cost", "PoolEntry",
+    "DeadlineExceeded", "LoadReport", "LoadSpec", "OverloadController",
+    "PRIORITIES", "QueueFull", "SimClock", "estimate_cost",
+    "make_arrivals", "run_load", "PoolEntry",
     "PoolRegistry", "RetryExhausted", "RetryPolicy", "UnknownPool",
     "RequestScheduler", "SelectRequest", "Ticket", "SelectionService",
     "Session", "SessionGone", "SessionStore",

@@ -32,13 +32,14 @@ from __future__ import annotations
 import hashlib
 from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Callable, Optional
+from typing import Callable, Iterator, Optional
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import greedy as greedy_lib
 from repro.core import streaming as stream_lib
+from repro.resilience.faults import TransientFault
 
 
 class UnknownPool(KeyError):
@@ -96,6 +97,14 @@ class PoolEntry:
     # pool (core/partition.py, DESIGN.md §9); 0 = the solver's auto
     # sizing (~128k rows per partition for chunked pools).
     partitions: int = 0
+    # Async admission (DESIGN.md §10): "warm" = target/cache ready;
+    # "warming" = the summing pass is still being stepped off the drain
+    # path (target_sum is None, requests wait against their deadline);
+    # "failed" = the warm pass died permanently (requests fail fast).
+    warm_state: str = "warm"
+    warm_error: Optional[str] = None
+    warmed_chunks: int = 0
+    _warm: Optional[Iterator] = field(default=None, repr=False)
     # CRAIG scan cache, resolved lazily on the first craig request:
     _fl: Optional[tuple] = field(default=None, repr=False)
 
@@ -113,6 +122,53 @@ class PoolEntry:
         if self._fl is None:
             self._fl = greedy_lib.resolve_fl_scan(self.grads, None, method)
         return self._fl
+
+
+def _warm_steps(entry: PoolEntry, chunk_iter: Callable,
+                cache: Optional[stream_lib.ChunkCache], retry,
+                n_expect: int) -> Iterator[None]:
+    """Incremental twin of ``streaming_target``: one summed+cached chunk
+    per ``next()``, so the admission pass can be advanced off the drain
+    path.  A transient fault restarts the pass (accumulators are
+    pass-local, ``cache.offer`` is idempotent for resident chunks — the
+    same exactness argument as the one-shot scan) up to ``retry``'s
+    budget; permanent faults propagate to ``step_warm``.  On completion
+    the entry flips to ``warm_state="warm"`` with its target installed.
+    """
+    attempt = 0
+    while True:
+        total = None
+        count = 0
+        idx = 0
+        try:
+            for chunk, v in chunk_iter():
+                c = jnp.asarray(chunk, jnp.float32)
+                if v is not None:
+                    c = c * jnp.asarray(v)[:, None].astype(jnp.float32)
+                s = jnp.sum(c, axis=0)
+                total = s if total is None else total + s
+                stream_lib.offer_chunk(cache, idx, count, chunk, v)
+                count += chunk.shape[0]
+                idx += 1
+                entry.warmed_chunks = idx
+                yield
+            break
+        except TransientFault as exc:
+            if retry is None or attempt >= retry.max_retries:
+                raise
+            retry.sleep(retry.delay(attempt))
+            attempt += 1
+    if total is None:
+        raise ValueError("empty pool iterator")
+    if count != n_expect:
+        raise ValueError(
+            f"deferred-warm row count mismatch: admission said "
+            f"{n_expect} rows, the pass saw {count} — the fingerprint "
+            "and cost estimates are wrong; re-register with the true n")
+    if cache is not None and cache.covers(idx):
+        cache.complete = idx
+    entry.target_sum = total
+    entry.warm_state = "warm"
 
 
 class PoolRegistry:
@@ -157,17 +213,31 @@ class PoolRegistry:
     def register_chunked(self, pool, pool_id: Optional[str] = None,
                          valid=None,
                          cache_bytes: int = stream_lib.DEFAULT_CACHE_BYTES,
-                         retry=None, partitions: int = 0) -> str:
+                         retry=None, partitions: int = 0,
+                         warm: str = "sync",
+                         n: Optional[int] = None) -> str:
         """Admit a ``ChunkedPool`` (or any ``(chunk, valid)`` factory).
 
-        The default target is computed with one summing pass now — and
-        the *same* pass warms the pool's compressed chunk cache, so the
+        The default target is computed with one summing pass — and the
+        *same* pass warms the pool's compressed chunk cache, so the
         admission scan is never re-paid: every streaming request's
         certified rounds (and, for ``ChunkedPool``-backed pools, its
         exact-row repairs) hit memory instead of the loader.  ``retry``
         (a ``repro.resilience.RetryPolicy``) lets the admission pass ride
         through transient loader faults the same way serving solves do.
+
+        ``warm="sync"`` (the default) runs that pass here, blocking until
+        the pool is servable.  ``warm="deferred"`` (DESIGN.md §10) admits
+        immediately in the ``"warming"`` state and leaves the pass to be
+        advanced chunk-at-a-time by ``step_warm`` — the scheduler calls
+        it off the drain path, so registering a huge pool never
+        head-of-line-blocks the serving queue.  Deferred admission needs
+        the row count up front (``ChunkedPool.n``, or ``n=`` for factory
+        pools) because the fingerprint folds it in.
         """
+        if warm not in ("sync", "deferred"):
+            raise ValueError(f"warm must be 'sync' or 'deferred', "
+                             f"got {warm!r}")
         if callable(pool):
             if valid is not None:
                 raise ValueError(
@@ -176,20 +246,30 @@ class PoolRegistry:
                     "valid) pairs instead")
             chunk_iter = pool
             row_fetch = None
+            n_known = None if n is None else int(n)
         else:
             chunk_iter = stream_lib.chunked_pool_iter(pool, valid=valid)
             row_fetch = stream_lib.array_row_fetch(pool.x)
+            n_known = int(pool.n)
         first = next(iter(chunk_iter()), None)
         if first is None:
             raise ValueError("empty pool iterator")
         first_chunk = first[0]
         cache = stream_lib.ChunkCache(
             int(cache_bytes), int(np.asarray(first_chunk).shape[1]))
-        target, n = stream_lib.streaming_target(chunk_iter, cache=cache,
-                                                retry=retry)
+        if warm == "sync":
+            target, n_rows = stream_lib.streaming_target(
+                chunk_iter, cache=cache, retry=retry)
+        else:
+            if n_known is None:
+                raise ValueError(
+                    "warm='deferred' needs n= for factory pools: the row "
+                    "count is part of the fingerprint and is otherwise "
+                    "only known after the summing pass")
+            target, n_rows = None, n_known
         fp_src = np.asarray(first_chunk, np.float32)
         fp = hashlib.sha1(
-            repr((n, fp_src.shape)).encode()
+            repr((n_rows, fp_src.shape)).encode()
             + _fingerprint_array(fp_src).encode()).hexdigest()[:16]
         fp = _fold_valid(fp, valid)
         known = self._by_fp.get(fp)
@@ -197,13 +277,45 @@ class PoolRegistry:
             self._pools.move_to_end(known)
             return known
         pid = pool_id or f"chunked-{fp}"
-        entry = PoolEntry(pool_id=pid, kind="chunked", n=int(n),
-                          d=int(target.shape[0]), fingerprint=fp,
+        entry = PoolEntry(pool_id=pid, kind="chunked", n=int(n_rows),
+                          d=int(np.asarray(first_chunk).shape[1]),
+                          fingerprint=fp,
                           chunk_iter=chunk_iter, target_sum=target,
                           cache=cache, row_fetch=row_fetch,
                           partitions=int(partitions))
+        if warm == "deferred":
+            entry.warm_state = "warming"
+            entry._warm = _warm_steps(entry, chunk_iter, cache, retry,
+                                      int(n_rows))
         self._admit(pid, fp, entry)
         return pid
+
+    # -- async warming (DESIGN.md §10) ---------------------------------------
+    def step_warm(self, pool_id: str, max_chunks: int = 8) -> bool:
+        """Advance a deferred admission pass by up to ``max_chunks``
+        chunks; returns True once the pool is no longer warming (warm or
+        failed).  A permanent warm failure is recorded on the entry
+        (``warm_state="failed"``, ``warm_error``) rather than raised —
+        the scheduler fails queued requests against it on the next step.
+        """
+        entry = self._pools.get(pool_id)
+        if entry is None or entry.warm_state != "warming" \
+                or entry._warm is None:
+            return True
+        try:
+            for _ in range(int(max_chunks)):
+                next(entry._warm)
+        except StopIteration:
+            entry._warm = None
+        except Exception as exc:
+            entry.warm_state = "failed"
+            entry.warm_error = f"{type(exc).__name__}: {exc}"
+            entry._warm = None
+        return entry.warm_state != "warming"
+
+    def warming(self) -> list[str]:
+        return [pid for pid, e in self._pools.items()
+                if e.warm_state == "warming"]
 
     def _admit(self, pid: str, fp: str, entry: PoolEntry) -> None:
         # Re-registering an explicit pool_id with different content must
@@ -223,6 +335,11 @@ class PoolRegistry:
             self.evictions += 1
 
     # -- lookup --------------------------------------------------------------
+    def peek(self, pool_id: str) -> Optional[PoolEntry]:
+        """Entry or None, without touching LRU order — the scheduler's
+        runnability scan must not promote pools it merely looked at."""
+        return self._pools.get(pool_id)
+
     def get(self, pool_id: str) -> PoolEntry:
         entry = self._pools.get(pool_id)
         if entry is None:
@@ -241,6 +358,7 @@ class PoolRegistry:
     def stats(self) -> dict:
         return {
             "pools": len(self._pools),
+            "warming": len(self.warming()),
             "evictions": self.evictions,
             "resident_bytes": sum(
                 e.n * e.d * 4 for e in self._pools.values()

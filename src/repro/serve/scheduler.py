@@ -28,6 +28,21 @@ per-pool circuit breaker fails a poisoned pool fast instead of wedging
 the queue; and when a certified streaming solve cannot be had, the
 scheduler walks the graceful-degradation ladder (resume → anytime-prefix
 → stochastic fallback), recording the rung on ``Ticket.degradation``.
+
+Overload (DESIGN.md §10): requests carry a **priority class**
+(interactive > batch > best-effort) and drain is no longer FIFO — within
+the highest queued class, tenants are served by deficit round robin
+weighted by ``TenantAccount.weight``, so one hot tenant cannot starve
+the rest.  An ``OverloadController`` watches queue depth: under brownout
+it sheds best-effort at submit (a labelled ``"shed"`` ticket, never
+charged) and routes same-pool differing-k gradmatch groups through one
+**shared anytime session** — each request answered as a bit-exact index
+prefix of the deepest k (rung ``"prefix-shared"``); under full overload
+non-interactive gradmatch drops to the stochastic rung.  Deadlines are
+validated at submit (``deadline_s <= 0`` is rejected immediately) and
+checked again per group at drain.  Pools admitted with deferred warming
+are skipped by the fair scan until warm — their admission pass advances
+only when nothing else is runnable, so it never head-of-line-blocks.
 """
 
 from __future__ import annotations
@@ -49,16 +64,25 @@ from repro.core import partition as part_lib
 from repro.core import random_sel
 from repro.core import streaming as stream_lib
 from repro.core.gradmatch import SelectionResult, _normalize
-from repro.core.omp import omp_select_batched
+from repro.core.omp import (omp_select_batched, omp_session_start,
+                            session_prefix_result, session_result)
 from repro.resilience.circuit import BreakerBoard, CircuitOpen
-from repro.resilience.degrade import DeadlineExceeded, stochastic_fallback
+from repro.resilience.degrade import (DeadlineExceeded,
+                                      stochastic_fallback,
+                                      stochastic_pool_select)
 from repro.resilience.faults import FaultError
 from repro.resilience.recovery import RetryPolicy
-from repro.serve.admission import AdmissionController, estimate_cost
+from repro.serve.admission import (AdmissionController, OverloadController,
+                                   estimate_cost)
 from repro.serve.registry import PoolEntry, PoolRegistry, UnknownPool
 
 SERVABLE = ("gradmatch", "gradmatch-partitioned", "craig", "craig-lazy",
             "craig-stochastic", "glister", "random")
+
+# Strict priority order: a queued request of a higher class always drains
+# before any lower class; fairness (DRR over tenants) applies *within*
+# the class.  The overload controller sheds from the right.
+PRIORITIES = ("interactive", "batch", "best-effort")
 
 _CRAIG_METHODS = {"craig": "dense", "craig-lazy": "lazy",
                   "craig-stochastic": "stochastic"}
@@ -80,6 +104,7 @@ class SelectRequest:
     tenant: str = "default"
     seed: int = 0                       # random / craig-stochastic
     deadline_s: Optional[float] = None  # fail fast past this queue age
+    priority: str = "interactive"       # see PRIORITIES
 
     def batch_key(self):
         # deadline_s deliberately excluded: it shapes *when* a ticket may
@@ -93,7 +118,7 @@ class Ticket:
     ticket_id: str
     request: SelectRequest
     cost: float
-    status: str = "queued"              # queued | done | failed
+    status: str = "queued"              # queued | done | failed | shed
     result: Optional[SelectionResult] = None
     error: Optional[str] = None
     batched_with: int = 0               # group size the solve ran at
@@ -119,7 +144,10 @@ class RequestScheduler:
                  checkpoint_root: Optional[str] = None,
                  checkpoint_every: int = 8,
                  degrade: bool = True,
-                 session_lookup: Optional[Callable] = None):
+                 session_lookup: Optional[Callable] = None,
+                 overload: Optional[OverloadController] = None,
+                 session_save: Optional[Callable] = None,
+                 warm_chunks: int = 8):
         self.registry = registry
         self.admission = admission or AdmissionController()
         self.max_batch = int(max_batch)
@@ -133,11 +161,29 @@ class RequestScheduler:
         # (pool_id, fingerprint, k) -> SelectionResult | None; wired by
         # SelectionService to its session store (anytime-prefix rung).
         self.session_lookup = session_lookup
+        # Brownout machinery (DESIGN.md §10): the overload controller
+        # decides shed/brownout levels; session_save(pool_id, fp, state)
+        # parks a shared-solve session so later groups reuse it.
+        self.overload = overload
+        self.session_save = session_save
+        self.warm_chunks = int(warm_chunks)
         self._queue: list[Ticket] = []
         self._ids = itertools.count()
         self.batches_run = 0
         self.singles_run = 0
+        self.shared_solves = 0
         self.degraded_served = {}          # rung -> count
+        # Shed-accounting invariant (load harness + parity gate):
+        #   admitted == completed + shed + failed + pending
+        # where "admitted" counts every ticket handed back to a caller
+        # (queued or shed) and rejections raised at submit count nowhere.
+        self.counters = {"admitted": 0, "shed": 0, "completed": 0,
+                         "failed": 0, "timeouts": 0}
+        # Deficit round robin state: tenant -> spendable work units, plus
+        # the rotation order.  Pruned when a tenant's queue empties so a
+        # returning tenant starts fresh instead of cashing stale credit.
+        self._deficits: dict[str, float] = {}
+        self._rr: list[str] = []
 
     # -- intake --------------------------------------------------------------
     def submit(self, req: SelectRequest) -> Ticket:
@@ -147,12 +193,40 @@ class RequestScheduler:
                 f"{SERVABLE}")
         if req.k <= 0:
             raise ValueError(f"k must be positive, got {req.k}")
+        if req.priority not in PRIORITIES:
+            raise ValueError(
+                f"unknown priority {req.priority!r}; one of {PRIORITIES}")
+        if req.deadline_s is not None and req.deadline_s <= 0:
+            # Fail fast: deadline_s is relative to submit, so a <= 0
+            # value is already expired — queueing it would only burn a
+            # queue slot to be timed out at drain.
+            raise ValueError(
+                f"deadline_s must be > 0, got {req.deadline_s}: the "
+                "deadline is measured from submit, so this request is "
+                "already expired")
         entry = self.registry.get(req.pool_id)   # raises UnknownPool
         # Fail fast before charging the tenant: an open breaker means
         # this request would only queue behind a poisoned pool.
         self.breakers.get(req.pool_id).peek()    # raises CircuitOpen
         cost = estimate_cost(entry.n, entry.d, req.k)
+        if self.overload is not None:
+            self.overload.observe(len(self._queue))
+            if self.overload.should_shed(req.priority):
+                # Visible, labelled, never charged: the caller gets a
+                # terminal "shed" ticket instead of an exception so the
+                # response carries its degradation rung like any other.
+                self.overload.record_shed(req.priority)
+                self.counters["admitted"] += 1
+                self.counters["shed"] += 1
+                return Ticket(
+                    ticket_id=f"req-{next(self._ids)}", request=req,
+                    cost=cost, status="shed", degradation="shed",
+                    error=(f"shed at submit: overload level "
+                           f"{self.overload.level} sheds "
+                           f"{req.priority!r} traffic"),
+                    submitted_at=self._clock())
         self.admission.admit(req.tenant, cost, len(self._queue))
+        self.counters["admitted"] += 1
         ticket = Ticket(ticket_id=f"req-{next(self._ids)}", request=req,
                         cost=cost, submitted_at=self._clock())
         self._queue.append(ticket)
@@ -172,42 +246,231 @@ class RequestScheduler:
         """
         done: list[Ticket] = []
         while self._queue:
-            head = self._queue[0]
-            try:
-                entry = self.registry.get(head.request.pool_id)
-            except UnknownPool as exc:
-                # Pool evicted between submit and drain: fail every ticket
-                # queued against it (same fate at their own head position).
-                group = self._take_group_by_pool(head.request.pool_id)
-                for t in group:
-                    t.status = "failed"
-                    t.error = f"{type(exc).__name__}: {exc}"
-            else:
-                try:
-                    # The real admission through the breaker (submit only
-                    # peeks): an open pool fails its whole queued group
-                    # immediately — no solve, no retry burn, no wedge.
-                    self.breakers.get(head.request.pool_id).allow()
-                except CircuitOpen as exc:
-                    group = self._take_group_by_pool(head.request.pool_id)
-                    for t in group:
-                        t.status = "failed"
-                        t.degradation = "failed"
-                        t.error = f"{type(exc).__name__}: {exc}"
-                else:
-                    if (head.request.strategy == "gradmatch"
-                            and entry.batchable):
-                        group = self._take_group(head.request.batch_key())
-                        self._run_gradmatch_batch(entry, group)
-                    else:
-                        group = [self._queue.pop(0)]
-                        self._run_single(entry, group[0])
-            for t in group:
-                self.admission.complete(
-                    t.request.tenant,
-                    refund=t.cost if t.status == "failed" else 0.0)
-            done.extend(group)
+            done.extend(self.drain_step())
         return done
+
+    def drain_step(self) -> list[Ticket]:
+        """Serve one scheduling quantum; returns the finalized tickets.
+
+        One step = pick the fairness winner (strict priority class, then
+        weighted deficit round robin over tenants), execute its group,
+        settle admission.  The open-loop load harness interleaves steps
+        with arrivals; ``drain()`` just loops this to empty.
+        """
+        if not self._queue:
+            return []
+        level = (self.overload.observe(len(self._queue))
+                 if self.overload is not None else 0)
+        head = self._fair_head()
+        if head is None:
+            # Every queued ticket waits on a warming pool: advance the
+            # deferred admission pass and time out what expired — the
+            # warm pass itself is the only runnable work.
+            group = self._advance_warming()
+        else:
+            group = self._execute_head(head, level)
+        for t in group:
+            self._settle(t)
+        return group
+
+    def _execute_head(self, head: Ticket, level: int) -> list[Ticket]:
+        req = head.request
+        try:
+            entry = self.registry.get(req.pool_id)
+        except UnknownPool as exc:
+            # Pool evicted between submit and drain: fail every ticket
+            # queued against it (same fate at their own head position).
+            group = self._take_group_by_pool(req.pool_id)
+            for t in group:
+                t.status = "failed"
+                t.error = f"{type(exc).__name__}: {exc}"
+            return group
+        try:
+            # The real admission through the breaker (submit only
+            # peeks): an open pool fails its whole queued group
+            # immediately — no solve, no retry burn, no wedge.
+            self.breakers.get(req.pool_id).allow()
+        except CircuitOpen as exc:
+            group = self._take_group_by_pool(req.pool_id)
+            for t in group:
+                t.status = "failed"
+                t.degradation = "failed"
+                t.error = f"{type(exc).__name__}: {exc}"
+            return group
+        if entry.warm_state == "failed":
+            group = self._take_group_by_pool(req.pool_id)
+            for t in group:
+                t.status = "failed"
+                t.degradation = "failed"
+                t.error = (f"pool admission warm failed: "
+                           f"{entry.warm_error}")
+            return group
+        if (level >= 2 and self.degrade and req.strategy == "gradmatch"
+                and req.priority != "interactive"):
+            # Full overload: non-interactive gradmatch takes the
+            # stochastic rung — a cheap subsample solve instead of the
+            # real thing, labelled as such.
+            self._queue.remove(head)
+            group = [head]
+            if self._expire_split(group):
+                self._run_brownout_single(entry, head)
+            self._charge_fair(group)
+            return group
+        if req.strategy == "gradmatch" and entry.batchable:
+            if (level >= 1 and self.degrade and req.target is None
+                    and req.valid is None):
+                # Brownout: same-pool default-target gradmatch requests
+                # of *any* k share one anytime session.
+                group = self._take_share_group(head)
+                live = self._expire_split(group)
+                if live:
+                    self._run_shared_anytime(entry, live)
+            else:
+                group = self._take_group(head)
+                live = self._expire_split(group)
+                if live:
+                    self._run_gradmatch_batch(entry, live)
+            self._charge_fair(group)
+            return group
+        self._queue.remove(head)
+        group = [head]
+        self._run_single(entry, head)   # checks its own deadline
+        self._charge_fair(group)
+        return group
+
+    def _settle(self, t: Ticket) -> None:
+        """Release the admission slot and keep the shed-accounting
+        invariant: failed work (timeouts included) refunds its charge."""
+        self.admission.complete(
+            t.request.tenant,
+            refund=t.cost if t.status == "failed" else 0.0)
+        if t.status == "done":
+            self.counters["completed"] += 1
+        else:
+            self.counters["failed"] += 1
+            if t.degradation == "timeout":
+                self.counters["timeouts"] += 1
+
+    # -- fairness (DESIGN.md §10) --------------------------------------------
+    def _runnable(self, t: Ticket) -> bool:
+        entry = self.registry.peek(t.request.pool_id)
+        return entry is None or entry.warm_state != "warming"
+
+    def _fair_head(self) -> Optional[Ticket]:
+        """Pick the next ticket: strict priority class first, weighted
+        deficit round robin over tenants within the class, FIFO within a
+        tenant.  Returns None when nothing is runnable (all queued pools
+        still warming)."""
+        runnable = [t for t in self._queue if self._runnable(t)]
+        if not runnable:
+            return None
+        for cls in PRIORITIES:
+            cand = [t for t in runnable if t.request.priority == cls]
+            if cand:
+                break
+        heads: dict[str, Ticket] = {}
+        for t in cand:
+            heads.setdefault(t.request.tenant, t)
+        queued_tenants = {t.request.tenant for t in self._queue}
+        # Reset-on-empty: a tenant with no queued work loses its deficit
+        # (and its rotation slot) — DRR credit must not accumulate while
+        # idle, or a burst would replay the whole backlog unfairly.
+        for tn in list(self._deficits):
+            if tn not in queued_tenants:
+                del self._deficits[tn]
+        self._rr = [tn for tn in self._rr if tn in queued_tenants]
+        for tn in heads:
+            if tn not in self._rr:
+                self._rr.append(tn)
+        order = [tn for tn in self._rr if tn in heads]
+        if len(order) == 1:
+            return heads[order[0]]
+        quantum = max(heads[tn].cost for tn in order)
+        while True:
+            for tn in order:
+                if self._deficits.get(tn, 0.0) >= heads[tn].cost:
+                    self._rr.remove(tn)
+                    self._rr.append(tn)
+                    return heads[tn]
+            for tn in order:
+                w = self.admission.account(tn).weight
+                self._deficits[tn] = (self._deficits.get(tn, 0.0)
+                                      + quantum * max(w, 1e-9))
+
+    def _charge_fair(self, group: list[Ticket]) -> None:
+        """Debit each served ticket's cost from its tenant's deficit.
+
+        Riders batched under another tenant's turn are charged too (they
+        got real work), but the debt is floored at one ticket deep —
+        unbounded negative deficit would starve a tenant for many
+        rotations after one lucky shared batch."""
+        for t in group:
+            if t.degradation == "timeout":
+                continue                 # no solve ran for this ticket
+            tn = t.request.tenant
+            d = self._deficits.get(tn, 0.0)
+            self._deficits[tn] = max(d - t.cost, -t.cost)
+
+    def _expire_split(self, group: list[Ticket]) -> list[Ticket]:
+        """Timeout the expired members of a group; returns the live rest.
+
+        Deadline semantics are identical to ``_run_single``'s check, but
+        applied per member before a *batched* solve so one stale ticket
+        neither blocks nor rides the batch."""
+        live = []
+        for t in group:
+            req = t.request
+            age = self._clock() - t.submitted_at
+            if req.deadline_s is not None and age > req.deadline_s:
+                t.status = "failed"
+                t.degradation = "timeout"
+                t.error = (f"DeadlineExceeded: deadline of "
+                           f"{req.deadline_s}s expired before the solve "
+                           f"started (queued {age:.3f}s)")
+            else:
+                live.append(t)
+        return live
+
+    def _advance_warming(self) -> list[Ticket]:
+        """Nothing is runnable: step the first blocked pool's deferred
+        admission pass, then time out blocked tickets whose deadline
+        expired while warming — served from the partially warmed cache's
+        stochastic rung when the request carried its own target, failed
+        as ``timeout`` otherwise."""
+        blocked = [t for t in self._queue if not self._runnable(t)]
+        self.registry.step_warm(blocked[0].request.pool_id,
+                                max_chunks=self.warm_chunks)
+        out: list[Ticket] = []
+        for t in list(self._queue):
+            if self._runnable(t):
+                continue
+            req = t.request
+            age = self._clock() - t.submitted_at
+            if req.deadline_s is None or age <= req.deadline_s:
+                continue
+            self._queue.remove(t)
+            entry = self.registry.peek(req.pool_id)
+            res = None
+            if (self.degrade and req.target is not None
+                    and req.strategy == "gradmatch"
+                    and entry is not None and entry.cache is not None):
+                res = stochastic_fallback(
+                    entry.cache, jnp.asarray(req.target, jnp.float32),
+                    req.k, seed=req.seed, lam=req.lam, eps=req.eps,
+                    positive=req.positive)
+            if res is not None:
+                t.result = SelectionResult(
+                    res.indices, _normalize(res.weights, res.mask),
+                    res.mask, res.err)
+                self._served(t, "stochastic")
+            else:
+                t.status = "failed"
+                t.degradation = "timeout"
+                t.error = (f"DeadlineExceeded: deadline of "
+                           f"{req.deadline_s}s expired while the pool "
+                           f"was still warming (queued {age:.3f}s)")
+            out.append(t)
+        return out
 
     def _take_group_by_pool(self, pool_id: str) -> list[Ticket]:
         group = [t for t in self._queue if t.request.pool_id == pool_id]
@@ -215,12 +478,130 @@ class RequestScheduler:
         self._queue = [t for t in self._queue if id(t) not in taken]
         return group
 
-    def _take_group(self, key) -> list[Ticket]:
-        group = [t for t in self._queue
-                 if t.request.batch_key() == key][: self.max_batch]
+    def _take_group(self, head: Ticket) -> list[Ticket]:
+        # Anchored on the fairness winner: the head always rides its own
+        # batch; other same-key tickets (any priority/tenant) fill the
+        # remaining slots in queue order — riding is free capacity.
+        key = head.request.batch_key()
+        group = [head] + [t for t in self._queue if t is not head
+                          and t.request.batch_key() == key]
+        group = group[: self.max_batch]
         taken = set(id(t) for t in group)
         self._queue = [t for t in self._queue if id(t) not in taken]
         return group
+
+    def _take_share_group(self, head: Ticket) -> list[Ticket]:
+        """Brownout grouping: same pool and solve parameters, default
+        target/valid, *any* k — the group shares one anytime session and
+        each member's answer is the first-k prefix.  Anchored on the
+        fairness winner like ``_take_group``."""
+        req = head.request
+
+        def shares(t: Ticket) -> bool:
+            r = t.request
+            return (r.pool_id == req.pool_id and r.strategy == "gradmatch"
+                    and r.target is None and r.valid is None
+                    and float(r.lam) == float(req.lam)
+                    and float(r.eps) == float(req.eps)
+                    and r.positive == req.positive)
+
+        group = [head] + [t for t in self._queue
+                          if t is not head and shares(t)]
+        group = group[: self.max_batch]
+        taken = set(id(t) for t in group)
+        self._queue = [t for t in self._queue if id(t) not in taken]
+        return group
+
+    def _run_shared_anytime(self, entry: PoolEntry,
+                            group: list[Ticket]) -> None:
+        """One anytime session answers the whole differing-k group.
+
+        The deepest request runs the real incremental solve (rung
+        ``"certified"`` — its indices are exactly the one-shot k_max
+        solve's); every shallower request is answered as the session's
+        first-k prefix, which the full-block prefix-growth schedule
+        certifies index-identical to its own one-shot solve
+        (``"prefix-shared"``: weights are renormalized, approximate).  A
+        live session already covering k_max short-circuits the solve
+        entirely.  The state is parked in the session store afterwards so
+        the next brownout group (and the degradation ladder) reuse it.
+        """
+        breaker = self.breakers.get(entry.pool_id)
+        req0 = group[0].request
+        k_max = max(t.request.k for t in group)
+        b = len(group)
+        if self.session_lookup is not None:
+            reuse = [self.session_lookup(entry.pool_id, entry.fingerprint,
+                                         t.request.k) for t in group]
+            if all(r is not None for r in reuse):
+                for t, res in zip(group, reuse):
+                    t.result = res
+                    self._served(t, "prefix-shared", batched=b)
+                return
+        try:
+            state = omp_session_start(
+                entry.grads, entry.target_sum, k_max, lam=req0.lam,
+                eps=req0.eps, positive=req0.positive, valid=entry.valid)
+        except Exception as exc:          # fail the group, not the queue
+            for t in group:
+                t.status = "failed"
+                t.error = f"{type(exc).__name__}: {exc}"
+            if self._is_pool_fault(exc):
+                breaker.record_failure()
+            return
+        for t in group:
+            k = t.request.k
+            if k == state.k:
+                idx, w, mask, err = session_result(state)
+                t.result = SelectionResult(idx, _normalize(w, mask),
+                                           mask, err)
+                t.status = "done"
+                t.batched_with = b
+                t.degradation = "certified"
+            else:
+                idx, w, mask, err = session_prefix_result(state, k)
+                t.result = SelectionResult(idx, _normalize(w, mask),
+                                           mask, err)
+                self._served(t, "prefix-shared", batched=b)
+        breaker.record_success()
+        self.shared_solves += 1
+        if self.session_save is not None:
+            self.session_save(entry.pool_id, entry.fingerprint, state)
+
+    def _run_brownout_single(self, entry: PoolEntry,
+                             ticket: Ticket) -> None:
+        """Full-overload floor for non-interactive gradmatch: a seeded
+        subsample solve (stochastic rung) instead of the full pool scan.
+        Falls back to the ordinary certified path when no subsample
+        arena exists (empty valid set, cache-less chunked pool)."""
+        req = ticket.request
+        target = (entry.target_sum if req.target is None
+                  else jnp.asarray(req.target, jnp.float32))
+        res = None
+        try:
+            if entry.kind == "array":
+                valid = entry.valid
+                if req.valid is not None:
+                    v = jnp.asarray(req.valid, bool)
+                    valid = v if valid is None else (valid & v)
+                res = stochastic_pool_select(
+                    entry.grads, target, req.k, seed=req.seed,
+                    lam=req.lam, eps=req.eps, positive=req.positive,
+                    valid=valid)
+            elif entry.cache is not None and req.valid is None:
+                res = stochastic_fallback(
+                    entry.cache, target, req.k, seed=req.seed,
+                    lam=req.lam, eps=req.eps, positive=req.positive)
+        except Exception:
+            res = None
+        if res is None:
+            self._run_single(entry, ticket)
+            return
+        ticket.result = SelectionResult(
+            res.indices, _normalize(res.weights, res.mask), res.mask,
+            res.err)
+        self._served(ticket, "stochastic")
+        self.singles_run += 1
 
     def _run_gradmatch_batch(self, entry: PoolEntry,
                              group: list[Ticket]) -> None:
@@ -353,9 +734,9 @@ class RequestScheduler:
             return True
         return False
 
-    def _served(self, ticket: Ticket, rung: str) -> None:
+    def _served(self, ticket: Ticket, rung: str, batched: int = 1) -> None:
         ticket.status = "done"
-        ticket.batched_with = 1
+        ticket.batched_with = batched
         ticket.degradation = rung
         self.degraded_served[rung] = self.degraded_served.get(rung, 0) + 1
 
@@ -456,5 +837,9 @@ class RequestScheduler:
         return {"pending": len(self._queue),
                 "batches_run": self.batches_run,
                 "singles_run": self.singles_run,
+                "shared_solves": self.shared_solves,
+                "counters": dict(self.counters),
                 "degraded_served": dict(self.degraded_served),
+                "overload": (None if self.overload is None
+                             else self.overload.stats()),
                 "breakers": self.breakers.stats()}

@@ -33,7 +33,8 @@ from repro.core.omp import (omp_session_extend, omp_session_start,
                             session_prefix_result, session_result)
 from repro.resilience.circuit import BreakerBoard
 from repro.resilience.recovery import RetryPolicy
-from repro.serve.admission import AdmissionController, estimate_cost
+from repro.serve.admission import (AdmissionController, OverloadController,
+                                   estimate_cost)
 from repro.serve.registry import PoolRegistry, UnknownPool
 from repro.serve.scheduler import RequestScheduler, SelectRequest, Ticket
 from repro.serve.sessions import SessionGone, SessionStore
@@ -55,6 +56,10 @@ class SelectionService:
         breaker_cooldown_s: float = 30.0,
         checkpoint_root: Optional[str] = None,
         degrade: bool = True,
+        overload: bool = True,
+        brownout_at: float = 0.5,
+        overload_at: float = 0.85,
+        recover_at: float = 0.25,
     ):
         self.registry = PoolRegistry(max_pools=max_pools)
         self.admission = AdmissionController(
@@ -65,11 +70,17 @@ class SelectionService:
         self.breakers = BreakerBoard(failure_threshold=breaker_threshold,
                                      cooldown_s=breaker_cooldown_s,
                                      **clock_kw)
+        self.overload = (OverloadController(
+            max_queue=max_queue, brownout_at=brownout_at,
+            overload_at=overload_at, recover_at=recover_at)
+            if overload else None)
         self.scheduler = RequestScheduler(
             self.registry, self.admission, max_batch=max_batch,
             retry=retry_policy, breakers=self.breakers,
             checkpoint_root=checkpoint_root, degrade=degrade,
-            session_lookup=self._prefix_lookup, **clock_kw)
+            session_lookup=self._prefix_lookup,
+            overload=self.overload, session_save=self._session_save,
+            **clock_kw)
         self.retry_policy = retry_policy
         self.sessions = SessionStore(max_sessions=max_sessions,
                                      ttl_s=session_ttl_s, **clock_kw)
@@ -94,6 +105,10 @@ class SelectionService:
 
     def drain(self) -> list[Ticket]:
         return self.scheduler.drain()
+
+    def drain_step(self) -> list[Ticket]:
+        """One fair scheduling quantum (the load harness's drive unit)."""
+        return self.scheduler.drain_step()
 
     def select(self, pool_id: str, k: int, **kw) -> SelectionResult:
         """Blocking convenience: submit + drain + unwrap one request.
@@ -181,6 +196,15 @@ class SelectionService:
     def _session_selection(state) -> SelectionResult:
         idx, w, mask, err = session_result(state)
         return SelectionResult(idx, _normalize(w, mask), mask, err)
+
+    def _session_save(self, pool_id: str, fingerprint: str,
+                      state) -> None:
+        """Park a brownout shared-solve session so later same-pool groups
+        (and the degradation ladder's anytime-prefix rung) reuse it.
+        Owned by the service, not a client tenant — TTL/LRU churn is
+        visible in ``sessions.stats()``."""
+        self.sessions.put(pool_id, "__brownout__", state,
+                          pool_fingerprint=fingerprint)
 
     def _prefix_lookup(self, pool_id: str, fingerprint: str,
                        k: int) -> Optional[SelectionResult]:

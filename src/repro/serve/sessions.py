@@ -61,6 +61,12 @@ class SessionStore:
         self._ids = itertools.count()
         self.evictions = 0
         self.expirations = 0
+        # Churn counters for the ``stats()`` snapshot: brownout decisions
+        # and tests read these to see whether capacity is beating
+        # fairness (high evictions) or clients are walking away (misses).
+        self.puts = 0
+        self.hits = 0
+        self.misses = 0
 
     def put(self, pool_id: str, tenant: str, state: OMPAnytimeState,
             pool_fingerprint: str = "") -> Session:
@@ -70,6 +76,7 @@ class SessionStore:
                        pool_fingerprint=pool_fingerprint, tenant=tenant,
                        state=state, created_at=now, last_used=now)
         self._sessions[sid] = sess
+        self.puts += 1
         self.sweep()
         while len(self._sessions) > self.max_sessions:
             self._sessions.popitem(last=False)
@@ -80,9 +87,11 @@ class SessionStore:
         self.sweep()
         sess = self._sessions.get(session_id)
         if sess is None:
+            self.misses += 1
             raise SessionGone(
                 f"session {session_id!r} not found (expired after "
                 f"{self.ttl_s}s idle, LRU-evicted, or never opened)")
+        self.hits += 1
         sess.last_used = self._clock()
         self._sessions.move_to_end(session_id)
         return sess
@@ -116,5 +125,9 @@ class SessionStore:
 
     def stats(self) -> dict:
         return {"sessions": len(self._sessions),
+                "max_sessions": self.max_sessions,
+                "puts": self.puts,
+                "hits": self.hits,
+                "misses": self.misses,
                 "evictions": self.evictions,
                 "expirations": self.expirations}
