@@ -540,10 +540,72 @@ def run_partitioned(scale_pool=65536, scale_parts=(1, 2, 4, 8), d=64,
     return rows
 
 
+def run_continual(d=64, k=64, capacity=1024, batch=128, batches=110,
+                  down_k=512, down_pool=2048, quick=False) -> list[dict]:
+    """Continual-stream maintenance (DESIGN.md §11): sustained admission
+    throughput with flat memory over >= 100 batches, and the decremental
+    downdate against a from-scratch re-solve at k=512 (the >= 5x
+    acceptance — removing the last committed pick must not cost a
+    re-solve)."""
+    import numpy as np
+
+    from repro.continual import BufferMaintainer
+    from repro.core import omp
+    from repro.core.decremental import omp_downdate
+
+    if quick:
+        k, capacity, batch, batches = 16, 128, 32, 12
+        down_k, down_pool = 128, 512
+    rows = []
+    record = make_recorder("selection_continual", rows)
+
+    # Sustained stream: random batches forever, memory must stay flat.
+    rng = np.random.default_rng(0)
+    tgt = rng.standard_normal(d).astype(np.float32)
+    m = BufferMaintainer(capacity=capacity, d=d, target=tgt, k=k,
+                         compress=True, seed=0)
+    m.admit(rng.standard_normal((batch, d)).astype(np.float32))  # warmup
+    mem_first = m.memory_bytes()
+    t0 = time.perf_counter()
+    for _ in range(batches - 1):
+        m.admit(rng.standard_normal((batch, d)).astype(np.float32))
+    jax.block_until_ready(m._sess.st.weights)
+    elapsed = time.perf_counter() - t0
+    mem_last = m.memory_bytes()
+    record(strategy="gradmatch-continual-stream", d=d, k=k,
+           capacity=capacity, batch=batch, batches=batches,
+           rows_per_s=round(batch * (batches - 1) / max(elapsed, 1e-9), 1),
+           admits=m.stats.admits, evicts=m.stats.evicts,
+           downdates=m.stats.downdates, resolves=m.stats.resolves,
+           replayed_rounds=m.stats.rounds,
+           mem_first=mem_first, mem_last=mem_last,
+           mem_ratio=round(mem_last / max(mem_first, 1), 4))
+
+    # Decremental downdate vs from-scratch re-solve at the big budget.
+    g = jax.random.normal(jax.random.PRNGKey(1), (down_pool, d))
+    target = jnp.sum(g, axis=0)
+    sess = omp.omp_session_start(g, target, down_k)
+    last = int(np.asarray(sess.indices)[down_k - 1])
+    t_down = time_fn(
+        lambda: omp_downdate(g, sess, last)[0].st.weights,
+        warmup=1, iters=3)
+    t_solve = time_fn(
+        lambda: omp.omp_session_start(g, target, down_k).st.weights,
+        warmup=0, iters=2)
+    speedup = t_solve / max(t_down, 1e-9)
+    accept = {} if quick else {"acceptance": 5.0}
+    record(strategy="gradmatch-continual-downdate", pool=down_pool, d=d,
+           k=down_k, ms_downdate=round(t_down * 1e3, 2),
+           ms_resolve=round(t_solve * 1e3, 2),
+           speedup=round(speedup, 2), **accept)
+    return rows
+
+
 def main(quick=False) -> list[dict]:
     return (run(quick=quick) + run_streaming(quick=quick)
             + run_greedy(quick=quick) + run_serve(quick=quick)
-            + run_partitioned(quick=quick) + run_faults(quick=quick))
+            + run_partitioned(quick=quick) + run_faults(quick=quick)
+            + run_continual(quick=quick))
 
 
 if __name__ == "__main__":

@@ -532,6 +532,74 @@ def check_partitioned(n=4096, d=64, k=128, gap_tol=0.05,
     return ok
 
 
+def check_continual(n=1024, d=32, k=24, cap=96, bs=48, down_pool=2048,
+                    down_d=64, down_k=512, min_speedup=5.0) -> bool:
+    """Continual-stream gate (repro.continual, DESIGN.md §11).
+
+    Differential smoke: after streaming ``n`` rows through a
+    ``cap``-slot buffer the maintained coreset must be index-identical
+    (weights to f32 tolerance) to a from-scratch session solve over the
+    surviving rows — the invariant tests/test_continual.py grids over,
+    re-asserted here at a beyond-unit-test shape.  Decremental speedup:
+    downdating the last committed pick at k = 512 must beat the
+    from-scratch re-solve by >= ``min_speedup`` (interleaved min-of-3;
+    the downdate is one truncation, the re-solve is 512 rounds — a
+    regression here means the truncate path is silently replaying)."""
+    import time as _time
+
+    from repro.continual import BufferMaintainer
+    from repro.core import omp as omp_lib
+    from repro.core.decremental import omp_downdate
+
+    g = np.asarray(jax.random.normal(jax.random.PRNGKey(31), (n, d)),
+                   np.float32)
+    tgt = g.sum(axis=0)
+    m = BufferMaintainer(capacity=cap, d=d, target=tgt, k=k,
+                         compress=False, seed=0)
+    for lo in range(0, n, bs):
+        m.admit(g[lo:lo + bs], gids=np.arange(lo, min(lo + bs, n)))
+    pool, okmask = m.pool_view()
+    idx, w, mask, _ = m.slot_result()
+    fresh = omp_lib.omp_session_start(pool, m.target, k, valid=okmask,
+                                      block=m.block)
+    diff_ok = (np.array_equal(np.asarray(idx), np.asarray(fresh.indices))
+               and np.allclose(np.asarray(w), np.asarray(fresh.weights),
+                               rtol=2e-4, atol=2e-5))
+
+    gd = jax.random.normal(jax.random.PRNGKey(37), (down_pool, down_d))
+    target = jnp.sum(gd, axis=0)
+    sess = omp_lib.omp_session_start(gd, target, down_k)
+    last = int(np.asarray(sess.indices)[down_k - 1])
+
+    def downdate():
+        jax.block_until_ready(omp_downdate(gd, sess, last)[0].st.weights)
+
+    def resolve():
+        jax.block_until_ready(
+            omp_lib.omp_session_start(gd, target, down_k).st.weights)
+
+    downdate(), resolve()                        # warm both paths
+    td, tr = [], []
+    for _ in range(3):
+        t0 = _time.perf_counter()
+        downdate()
+        td.append(_time.perf_counter() - t0)
+        t0 = _time.perf_counter()
+        resolve()
+        tr.append(_time.perf_counter() - t0)
+    speedup = min(tr) / max(min(td), 1e-9)
+    speed_ok = speedup >= min_speedup
+
+    ok = diff_ok and speed_ok
+    print(f"parity_gate,check=continual,pool={n},k={k},cap={cap},"
+          f"evicts={m.stats.evicts},downdates={m.stats.downdates},"
+          f"diff_exact={diff_ok},down_k={down_k},"
+          f"down_ms={min(td) * 1e3:.2f},resolve_ms={min(tr) * 1e3:.2f},"
+          f"speedup={speedup:.2f},min_speedup={min_speedup},ok={ok}",
+          flush=True)
+    return ok
+
+
 def main() -> int:
     ok = check_streaming_parity()
     ok &= check_streaming_overhead()
@@ -542,6 +610,7 @@ def main() -> int:
     ok &= check_serve_load()
     ok &= check_fault_recovery()
     ok &= check_partitioned()
+    ok &= check_continual()
     print(f"parity_gate,{'PASS' if ok else 'FAIL'}", flush=True)
     return 0 if ok else 1
 

@@ -1,0 +1,13 @@
+"""Continual-stream selection: bounded-buffer coreset maintenance
+(DESIGN.md §11).
+
+``BufferMaintainer`` admits gradient batches forever under a fixed
+memory budget, keeping its committed subset exact against a from-scratch
+solve over the surviving rows via decremental OMP
+(``repro.core.decremental``); ``continual_select`` is the in-memory
+strategy driver behind ``selection.select("gradmatch-continual", ...)``.
+"""
+
+from repro.continual.buffer import BufferMaintainer, continual_select
+
+__all__ = ["BufferMaintainer", "continual_select"]

@@ -1,0 +1,479 @@
+"""Bounded-buffer continual selection (DESIGN.md §11).
+
+A continual-learning tenant streams gradient batches forever; the buffer
+holds at most ``capacity`` rows yet must keep its committed ``k``-subset
+*exact* — index-identical (weights to tolerance) to a from-scratch OMP
+solve over whatever rows currently survive in the buffer.  The pieces:
+
+* **Storage** reuses the ``ChunkCache`` arena layout from
+  ``core/streaming.py``: a flat bf16 row arena with f32 exact-norm and
+  measured-compression-error sidecars plus gid / ok sidecars.  The solver
+  works against a f32 pool view of the stored rows (the upcast *is* the
+  pool — what you store is what you solve), so compression never makes
+  the maintained solution drift from the from-scratch one.
+* **Admission** scores each incoming batch against the recorded residual
+  trajectory (``decremental.certify_admission``): a round whose winning
+  gain clears every newcomer by the f32 band keeps its pick with no work;
+  the earliest uncertifiable round is where the replay starts.
+  Fail-closed: a violation at round 0 is a full re-solve on the buffer.
+* **Eviction** frees slots for newcomers when the buffer is full:
+  non-committed residents go first (removing a candidate that never won
+  an argmax changes no argmax — a free eviction), scored by current
+  residual correlation with seeded softmax-over-scores tie-breaking;
+  only then are committed rows removed, lowest recorded winning gain
+  first, via the decremental downdate path (truncate at the earliest
+  victim round + replay).
+* **Narrow-regime forcing**: the session block is rounded up past the
+  proxy dimension so the engine never builds the wide-regime column
+  cache over the arena — every argmax scores against the live pool view,
+  so a slot overwrite is visible to every subsequent round with no cache
+  patching (and no staleness to reason about).
+
+The maintained invariant after every ``admit``: the session state equals
+a fresh ``omp_session_start(pool_view, target, k, valid=ok,
+block=self.block)`` — indices exact away from the f32 noise floor,
+weights to tolerance (the bar every engine in this repo certifies
+against, tests/test_continual.py).  Checkpointing via the PR 6
+``solver_state`` capture makes a killed stream resume *bit*-exactly: the
+snapshot holds the arena, session buffers, trajectory and counters, and
+everything downstream is deterministic (per-admission RNG is keyed on
+``(seed, batch_counter)``).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.solver_state import load_solver_state, save_solver_state
+from repro.core import decremental as dec
+from repro.core.gradmatch import SelectionResult, _normalize
+from repro.core.omp import OMPAnytimeState, OMPIncState, _block_cap, \
+    _empty_inc_state
+from repro.core.streaming import SelectStats, _bucket, _compress_chunk
+from repro.kernels import ops
+
+__all__ = ["BufferMaintainer", "continual_select"]
+
+
+def _soft_lowest(scores: np.ndarray, m: int, rng: np.random.Generator,
+                 temp: float) -> np.ndarray:
+    """Sample ``m`` entries biased toward the *lowest* scores.
+
+    Gumbel-top-m over ``-scores / temp`` == sampling without replacement
+    from softmax(-scores / temp): a seeded, reproducible tie-breaker —
+    equal-gain victims don't depend on argsort stability, and a
+    temperature of 0+ recovers the deterministic lowest-m.
+    """
+    if m >= scores.shape[0]:
+        return np.arange(scores.shape[0])
+    keys = -scores / max(temp, 1e-12) + rng.gumbel(size=scores.shape[0])
+    return np.sort(np.argpartition(keys, -m)[-m:])
+
+
+class BufferMaintainer:
+    """Fixed-capacity row buffer maintaining an exact OMP coreset."""
+
+    def __init__(self, capacity: int, d: int, target, k: int, *,
+                 lam: float = 0.5, eps: float = 1e-10, nnls_iters: int = 50,
+                 positive: bool = True, compress: bool = True, seed: int = 0,
+                 evict_temp: float = 1.0, band_rel: float = 1e-4,
+                 band_abs: float = 1e-6, checkpoint_dir: Optional[str] = None,
+                 checkpoint_every: int = 1):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        if k < 1:
+            raise ValueError(f"k must be >= 1, got {k}")
+        self.capacity = int(capacity)
+        self.d = int(d)
+        self.k = int(k)
+        self.lam = float(lam)
+        self.eps = float(eps)
+        self.nnls_iters = int(nnls_iters)
+        self.positive = bool(positive)
+        self.compress = bool(compress)
+        self.seed = int(seed)
+        self.evict_temp = float(evict_temp)
+        self.band_rel = float(band_rel)
+        self.band_abs = float(band_abs)
+        self.checkpoint_dir = checkpoint_dir
+        self.checkpoint_every = int(checkpoint_every)
+        # Force the narrow regime: a block strictly wider than d means the
+        # session engine never allocates the (n, P) column cache, so slot
+        # overwrites need no cache patching (module docstring).
+        self.block = 128 * (-(-(self.d + 1) // 128))
+        self.target = jnp.asarray(target, jnp.float32)
+        if self.target.shape != (self.d,):
+            raise ValueError(
+                f"target shape {self.target.shape} != ({self.d},)")
+        # Arena (ChunkCache layout): bf16 rows + f32 norm / compression-
+        # error sidecars, gid / ok sidecars.  The f32 pool view is what
+        # the solver sees (== upcast of storage when compress=True).
+        self._rows_bf = jnp.zeros((self.capacity, self.d), jnp.bfloat16)
+        self._norms = jnp.zeros((self.capacity,), jnp.float32)
+        self._errn = jnp.zeros((self.capacity,), jnp.float32)
+        self._gids = np.full((self.capacity,), -1, np.int64)
+        self._ok = np.zeros((self.capacity,), bool)
+        self._pool = jnp.zeros((self.capacity, self.d), jnp.float32)
+        self._sess = OMPAnytimeState(
+            k=0, block=self.block,
+            st=_empty_inc_state(_block_cap(self.k, self.block),
+                                self.capacity, self.d, self.target),
+            c0=jnp.zeros((self.capacity,), jnp.float32),
+            target=self.target,
+            valid=jnp.zeros((self.capacity,), bool),
+            lam=self.lam, eps=self.eps, nnls_iters=self.nnls_iters,
+            positive=self.positive)
+        self._trace = dec._empty_trace(self.d)
+        self.stats = SelectStats(pool_size=self.capacity)
+        self.batches = 0
+        self._next_gid = 0
+
+    # -- admission ----------------------------------------------------------
+
+    def admit(self, rows, gids=None) -> dict:
+        """Admit one incoming batch; returns an accounting dict.
+
+        Batches larger than the buffer are folded in ``capacity``-row
+        waves (only the last wave's rows can survive a wave that itself
+        overfills the buffer — same as admitting them one batch at a
+        time).  ``gids`` default to a running global counter.
+        """
+        rows = np.asarray(rows, np.float32)
+        if rows.ndim != 2 or rows.shape[1] != self.d:
+            raise ValueError(
+                f"batch shape {rows.shape} incompatible with d={self.d}")
+        b = rows.shape[0]
+        if gids is None:
+            gids = np.arange(self._next_gid, self._next_gid + b,
+                             dtype=np.int64)
+        else:
+            gids = np.asarray(gids, np.int64)
+            if gids.shape != (b,):
+                raise ValueError(f"gids shape {gids.shape} != ({b},)")
+        self._next_gid = max(self._next_gid, int(gids.max()) + 1 if b else 0)
+        report = {"admitted": 0, "evicted": 0, "downdates": 0,
+                  "replayed_from": self._sess.k}
+        for lo in range(0, b, self.capacity):
+            sub = self._admit_wave(rows[lo:lo + self.capacity],
+                                   gids[lo:lo + self.capacity])
+            report["admitted"] += sub["admitted"]
+            report["evicted"] += sub["evicted"]
+            report["downdates"] += sub["downdates"]
+            report["replayed_from"] = min(report["replayed_from"],
+                                          sub["replayed_from"])
+        if b == 0:
+            return report
+        self.batches += 1
+        if self.checkpoint_dir and self.batches % self.checkpoint_every == 0:
+            self.save_checkpoint()
+        return report
+
+    def _committed_rounds(self) -> dict:
+        """slot -> earliest committed round (degenerate re-picks map to
+        the slot's first, real round)."""
+        ind = np.asarray(self._sess.indices)
+        msk = np.asarray(self._sess.mask)
+        rounds: dict = {}
+        for t in np.nonzero(msk)[0]:
+            rounds.setdefault(int(ind[t]), int(t))
+        return rounds
+
+    def _admit_wave(self, rows: np.ndarray, gids: np.ndarray) -> dict:
+        b = rows.shape[0]
+        if b == 0:
+            return {"admitted": 0, "evicted": 0, "downdates": 0,
+                    "replayed_from": self._sess.k}
+        rng = np.random.default_rng((self.seed, self.batches))
+        rounds = self._committed_rounds()
+
+        # 1) victims: free slots first, then non-committed residents
+        #    (free evictions), then committed rows via the downdate path.
+        free = np.nonzero(~self._ok)[0]
+        n_free = min(b, free.size)
+        need = b - n_free
+        victims = np.empty((0,), np.int64)
+        n_down = 0
+        t_evict = self._sess.k
+        if need > 0:
+            occupied = np.nonzero(self._ok)[0]
+            committed = np.fromiter(rounds.keys(), np.int64,
+                                    count=len(rounds))
+            is_comm = np.isin(occupied, committed)
+            noncomm = occupied[~is_comm]
+            take_nc = min(need, noncomm.size)
+            picks = []
+            if take_nc:
+                resid = np.asarray(self._sess.st.residual, np.float32)
+                sc = np.asarray(self._pool, np.float32)[noncomm] @ resid
+                if not self.positive:
+                    sc = np.abs(sc)
+                picks.append(noncomm[_soft_lowest(sc, take_nc, rng,
+                                                  self.evict_temp)])
+            n_down = need - take_nc
+            if n_down > 0:
+                comm = occupied[is_comm]
+                gains = np.array([self._trace.win[rounds[int(s)]]
+                                  for s in comm], np.float32)
+                sel = comm[_soft_lowest(gains, n_down, rng, self.evict_temp)]
+                picks.append(sel)
+                t_evict = min(rounds[int(s)] for s in sel)
+            victims = np.concatenate(picks) if picks else victims
+
+        # 2) write newcomers into victim + free slots (bf16 + sidecars),
+        #    patch the pool view and the per-session c0.
+        slots = np.sort(np.concatenate([free[:n_free], victims]))
+        rows_j = jnp.asarray(rows)
+        cpad = _bucket(b)
+        padded = jnp.pad(rows_j, ((0, cpad - b), (0, 0)))
+        rows_bf, norms, errn = _compress_chunk(padded, jnp.arange(cpad) < b)
+        rows_bf, norms, errn = rows_bf[:b], norms[:b], errn[:b]
+        stored = rows_bf.astype(jnp.float32) if self.compress else rows_j
+        sl = jnp.asarray(slots)
+        self._rows_bf = self._rows_bf.at[sl].set(rows_bf)
+        self._norms = self._norms.at[sl].set(norms)
+        self._errn = self._errn.at[sl].set(errn)
+        self._pool = self._pool.at[sl].set(stored)
+        self._gids[slots] = gids
+        self._ok[slots] = True
+        new_c0 = self._sess.c0.at[sl].set(ops.corr(stored, self.target))
+
+        # 3) earliest round the admission can disturb: committed-victim
+        #    rounds (their slots now hold newcomer content) and the
+        #    earliest certificate violation; fail-closed to 0 == re-solve.
+        t_cert = dec.certify_admission(
+            np.asarray(stored, np.float32), self._trace, self._sess.k,
+            positive=self.positive, band_rel=self.band_rel,
+            band_abs=self.band_abs)
+        t_star = min(t_evict, t_cert)
+
+        k_before = self._sess.k
+        sess = self._sess._replace(c0=new_c0,
+                                   valid=jnp.asarray(self._ok))
+        trace = self._trace
+        if t_star < sess.k:
+            if t_star == 0 and k_before > 0:
+                self.stats.resolves += 1
+            sess = dec.session_truncate(sess, t_star)
+            trace = dec.ReplayTrace(resid=trace.resid[:t_star],
+                                    win=trace.win[:t_star])
+        sess, trace = dec.session_extend_traced(self._pool, sess, self.k,
+                                                trace)
+        self._sess, self._trace = sess, trace
+
+        self.stats.admits += b
+        self.stats.evicts += int(victims.size)
+        self.stats.downdates += n_down
+        self.stats.rounds += self.k - t_star
+        return {"admitted": b, "evicted": int(victims.size),
+                "downdates": n_down, "replayed_from": t_star}
+
+    # -- retraction ---------------------------------------------------------
+
+    def invalidate(self, gids) -> int:
+        """Drop buffer rows by gid (upstream retractions, label fix-ups).
+
+        Non-committed rows leave for free; committed rows go through the
+        decremental path (truncate at the earliest dropped round, replay
+        to budget).  Returns the number of rows dropped.
+        """
+        drop = np.isin(self._gids, np.asarray(gids)) & self._ok
+        slots = np.nonzero(drop)[0]
+        if slots.size == 0:
+            return 0
+        rounds = self._committed_rounds()
+        hit = [rounds[int(s)] for s in slots if int(s) in rounds]
+        self._ok[slots] = False
+        sess = self._sess._replace(valid=jnp.asarray(self._ok))
+        if hit:
+            t_star = min(hit)
+            if t_star == 0 and self._sess.k > 0:
+                self.stats.resolves += 1
+            self.stats.downdates += len(hit)
+            self.stats.rounds += self.k - t_star
+            sess = dec.session_truncate(sess, t_star)
+            trace = dec.ReplayTrace(resid=self._trace.resid[:t_star],
+                                    win=self._trace.win[:t_star])
+            sess, trace = dec.session_extend_traced(self._pool, sess,
+                                                    self.k, trace)
+            self._trace = trace
+        self._sess = sess
+        self.stats.evicts += int(slots.size)
+        return int(slots.size)
+
+    # -- results ------------------------------------------------------------
+
+    def slot_result(self):
+        """Raw slot-space solution ``(indices, weights, mask, err)`` — the
+        differential-test view (compare against a from-scratch solve over
+        ``pool_view()``)."""
+        return (self._sess.indices, self._sess.weights, self._sess.mask,
+                self._sess.err)
+
+    def result(self) -> SelectionResult:
+        """Committed coreset in gid space, weights normalized."""
+        idx = self._sess.indices
+        mask = self._sess.mask
+        gids = jnp.asarray(self._gids.astype(np.int32))
+        gid_idx = jnp.where(mask, gids[jnp.where(mask, idx, 0)],
+                            -1).astype(jnp.int32)
+        return SelectionResult(gid_idx,
+                               _normalize(self._sess.weights, mask), mask,
+                               self._sess.err, stats=self.stats)
+
+    def pool_view(self):
+        """(f32 pool, ok mask) — exactly what a from-scratch solve sees."""
+        return self._pool, jnp.asarray(self._ok)
+
+    def memory_bytes(self) -> int:
+        """Resident bytes: arena + sidecars + f32 solver view + session
+        prefix buffers + trace.  Flat in the number of admitted batches —
+        the buffer never grows past ``capacity`` and the session past
+        ``block_cap(k)`` (the BENCH table asserts this over >= 100
+        batches)."""
+        arena = (self._rows_bf.nbytes + self._norms.nbytes +
+                 self._errn.nbytes + self._gids.nbytes + self._ok.nbytes +
+                 self._pool.nbytes)
+        st = self._sess.st
+        sess = sum(int(np.asarray(x).nbytes) for x in
+                   (st.indices, st.mask, st.weights, st.colcache, st.gram,
+                    st.gram_absrow, st.tcorr, st.rows, st.residual,
+                    self._sess.c0, self._sess.valid))
+        trace = self._trace.resid.nbytes + self._trace.win.nbytes
+        return int(arena + sess + trace)
+
+    # -- checkpoint / resume (PR 6 solver_state capture) ---------------------
+
+    def state_dict(self) -> dict:
+        st = self._sess.st
+        return {
+            "config": {
+                "capacity": np.int64(self.capacity), "d": np.int64(self.d),
+                "k": np.int64(self.k), "block": np.int64(self.block),
+                "lam": np.float64(self.lam), "eps": np.float64(self.eps),
+                "nnls_iters": np.int64(self.nnls_iters),
+                "positive": np.bool_(self.positive),
+                "compress": np.bool_(self.compress),
+                "seed": np.int64(self.seed),
+                "evict_temp": np.float64(self.evict_temp),
+                "band_rel": np.float64(self.band_rel),
+                "band_abs": np.float64(self.band_abs),
+                "checkpoint_every": np.int64(self.checkpoint_every),
+            },
+            "arena": {
+                "rows_bf": np.asarray(self._rows_bf),
+                "norms": np.asarray(self._norms),
+                "errn": np.asarray(self._errn),
+                "gids": self._gids.copy(), "ok": self._ok.copy(),
+                "pool": np.asarray(self._pool),
+            },
+            "session": {
+                "k": np.int64(self._sess.k),
+                "c0": np.asarray(self._sess.c0),
+                "valid": np.asarray(self._sess.valid),
+                "target": np.asarray(self.target),
+                "st": {f: np.asarray(getattr(st, f))
+                       for f in OMPIncState._fields},
+            },
+            "trace": {"resid": self._trace.resid, "win": self._trace.win},
+            "counters": {
+                "batches": np.int64(self.batches),
+                "next_gid": np.int64(self._next_gid),
+                "admits": np.int64(self.stats.admits),
+                "evicts": np.int64(self.stats.evicts),
+                "downdates": np.int64(self.stats.downdates),
+                "resolves": np.int64(self.stats.resolves),
+                "rounds": np.int64(self.stats.rounds),
+                "checkpoints": np.int64(self.stats.checkpoints),
+                "resumes": np.int64(self.stats.resumes),
+            },
+        }
+
+    def save_checkpoint(self) -> str:
+        if not self.checkpoint_dir:
+            raise ValueError("no checkpoint_dir configured")
+        path = save_solver_state(self.checkpoint_dir, self.batches,
+                                 self.state_dict())
+        self.stats.checkpoints += 1
+        return path
+
+    def _load_tree(self, tree: dict) -> None:
+        ar = tree["arena"]
+        self._rows_bf = jnp.asarray(ar["rows_bf"])
+        self._norms = jnp.asarray(ar["norms"])
+        self._errn = jnp.asarray(ar["errn"])
+        self._gids = np.asarray(ar["gids"], np.int64)
+        self._ok = np.asarray(ar["ok"], bool)
+        self._pool = jnp.asarray(ar["pool"])
+        se = tree["session"]
+        st = OMPIncState(**{f: jnp.asarray(se["st"][f])
+                            for f in OMPIncState._fields})
+        self._sess = self._sess._replace(
+            k=int(se["k"]), st=st, c0=jnp.asarray(se["c0"]),
+            valid=jnp.asarray(se["valid"]))
+        self._trace = dec.ReplayTrace(
+            resid=np.asarray(tree["trace"]["resid"], np.float32).reshape(
+                -1, self.d),
+            win=np.asarray(tree["trace"]["win"], np.float32).reshape(-1))
+        ct = tree["counters"]
+        self.batches = int(ct["batches"])
+        self._next_gid = int(ct["next_gid"])
+        for f in ("admits", "evicts", "downdates", "resolves", "rounds",
+                  "checkpoints", "resumes"):
+            setattr(self.stats, f, int(ct[f]))
+        self.stats.resumes += 1
+
+    @classmethod
+    def restore(cls, checkpoint_dir: str) -> "Optional[BufferMaintainer]":
+        """Resume a killed stream bit-exactly; ``None`` if nothing saved."""
+        tree = load_solver_state(checkpoint_dir)
+        if tree is None:
+            return None
+        cfg = tree["config"]
+        m = cls(capacity=int(cfg["capacity"]), d=int(cfg["d"]),
+                target=np.asarray(tree["session"]["target"]),
+                k=int(cfg["k"]), lam=float(cfg["lam"]), eps=float(cfg["eps"]),
+                nnls_iters=int(cfg["nnls_iters"]),
+                positive=bool(cfg["positive"]),
+                compress=bool(cfg["compress"]), seed=int(cfg["seed"]),
+                evict_temp=float(cfg["evict_temp"]),
+                band_rel=float(cfg["band_rel"]),
+                band_abs=float(cfg["band_abs"]),
+                checkpoint_dir=checkpoint_dir,
+                checkpoint_every=int(cfg["checkpoint_every"]))
+        if m.block != int(cfg["block"]):
+            raise ValueError(
+                f"checkpoint block {int(cfg['block'])} != derived {m.block}")
+        m._load_tree(tree)
+        return m
+
+
+def continual_select(proxies, k: int, *, target=None,
+                     capacity: Optional[int] = None,
+                     batch: Optional[int] = None, lam: float = 0.5,
+                     eps: float = 1e-10, seed: int = 0) -> SelectionResult:
+    """In-memory driver for strategy ``"gradmatch-continual"``.
+
+    Streams the proxy matrix through a :class:`BufferMaintainer` in
+    admission batches.  With the default ``capacity=None`` the buffer
+    covers the whole pool (nothing is ever evicted) and the selection is
+    the pooled ``gradmatch`` solution — the free-parity case; a smaller
+    ``capacity`` bounds memory and selects over the surviving rows.
+    ``compress`` is off on this path so the buffer solves the caller's
+    exact f32 rows.
+    """
+    g = jnp.asarray(proxies, jnp.float32)
+    n, d = g.shape
+    cap = n if capacity is None else int(capacity)
+    bs = min(n, 256) if batch is None else int(batch)
+    tgt = jnp.sum(g, axis=0) if target is None else jnp.asarray(
+        target, jnp.float32)
+    m = BufferMaintainer(capacity=cap, d=d, target=tgt, k=k, lam=lam,
+                         eps=eps, compress=False, seed=seed)
+    g_np = np.asarray(g)
+    for lo in range(0, n, bs):
+        hi = min(lo + bs, n)
+        m.admit(g_np[lo:hi], gids=np.arange(lo, hi, dtype=np.int64))
+    return m.result()

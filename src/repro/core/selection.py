@@ -25,6 +25,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.continual import buffer as continual_lib
 from repro.core import craig as craig_lib
 from repro.core import glister as glister_lib
 from repro.core import gradmatch as gm_lib
@@ -35,8 +36,9 @@ from repro.core import streaming as stream_lib
 from repro.core.gradmatch import SelectionResult
 
 STRATEGIES = ("gradmatch", "gradmatch-stream", "gradmatch-partitioned",
-              "gradmatch-pb", "craig", "craig-lazy", "craig-lazy-otf",
-              "craig-stochastic", "craig-pb", "glister", "random", "full")
+              "gradmatch-pb", "gradmatch-continual", "craig", "craig-lazy",
+              "craig-lazy-otf", "craig-stochastic", "craig-pb", "glister",
+              "random", "full")
 
 # CRAIG tiers: the dense oracle and the fast greedy modes of the shared
 # engine (core/greedy.py).  "craig-lazy" selects index-identically to
@@ -66,7 +68,9 @@ def select(
     chunk_size: int = 2048,            # gradmatch-stream: pool chunk rows
     stream_buffer: int = 256,          # gradmatch-stream: top-M buffer slots
     stream_cache_bytes: int = stream_lib.DEFAULT_CACHE_BYTES,
-    partitions: int = 0,               # gradmatch-partitioned: P (0 = auto)
+    partitions: Optional[int] = None,  # gradmatch-partitioned: P (None = auto)
+    buffer_cap: Optional[int] = None,      # gradmatch-continual: buffer rows
+    continual_batch: Optional[int] = None,  # gradmatch-continual: admit size
 ) -> SelectionResult:
     """Resolve one selection round.  ``val_target`` switches isValid=True.
 
@@ -92,6 +96,31 @@ def select(
     out-of-core pool should use ``streaming.gradmatch_streaming``
     directly with a chunk factory (the trainer does).
     """
+    if strategy not in STRATEGIES:
+        raise ValueError(f"unknown strategy {strategy!r}; known: {STRATEGIES}")
+    # Strategy-specific knobs are rejected, not silently ignored, when the
+    # strategy cannot honor them — a caller passing them is expressing an
+    # expectation this dispatch would otherwise quietly drop.
+    if partitions is not None:
+        if strategy != "gradmatch-partitioned":
+            raise ValueError(
+                f"partitions={partitions} only applies to "
+                f"'gradmatch-partitioned', not {strategy!r} — it would be "
+                "silently ignored (drop it, or switch strategy)")
+        if partitions < 1:
+            raise ValueError(
+                f"partitions must be >= 1, got {partitions}; omit it (or "
+                "pass None) for automatic partition sizing")
+    for name, val in (("buffer_cap", buffer_cap),
+                      ("continual_batch", continual_batch)):
+        if val is None:
+            continue
+        if strategy != "gradmatch-continual":
+            raise ValueError(
+                f"{name}={val} only applies to 'gradmatch-continual', not "
+                f"{strategy!r} — it would be silently ignored")
+        if val < 1:
+            raise ValueError(f"{name} must be >= 1, got {val}")
     n = proxies.shape[0]
     if strategy == "full":
         w = jnp.full((n,), 1.0 / n, jnp.float32)
@@ -133,10 +162,20 @@ def select(
         use_labels = (per_class and labels is not None and num_classes > 1
                       and val_target is None)
         return part_lib.gradmatch_partitioned(
-            proxies, k, partitions=partitions,
+            proxies, k, partitions=0 if partitions is None else partitions,
             labels=labels if use_labels else None,
             num_classes=num_classes if use_labels else 0,
             target=val_target, lam=lam, eps=eps, method=omp_method)
+    if strategy == "gradmatch-continual":
+        # Bounded-buffer maintained selection (repro.continual, DESIGN.md
+        # §11): the pool is streamed through a fixed-capacity buffer in
+        # admission batches; always pooled (like gradmatch-stream).  With
+        # the default buffer_cap=None the buffer covers the pool and the
+        # result is the pooled gradmatch solution; a smaller cap bounds
+        # memory and selects over the rows surviving eviction.
+        return continual_lib.continual_select(
+            proxies, k, target=val_target, capacity=buffer_cap,
+            batch=continual_batch, lam=lam, eps=eps)
     if strategy == "gradmatch-pb":
         return gm_lib.gradmatch_pb(
             proxies, batch_size, max(k // batch_size, 1), lam=lam, eps=eps,

@@ -872,6 +872,11 @@ class SelectStats:
                                 # corruption (never silently selected)
     checkpoints: int = 0        # mid-solve snapshots written
     resumes: int = 0            # solves resumed from a checkpoint
+    admits: int = 0             # continual: rows admitted to the buffer
+    evicts: int = 0             # continual: buffer rows evicted (any tier)
+    downdates: int = 0          # continual: committed rows removed via the
+                                # decremental downdate path
+    resolves: int = 0           # continual: fail-closed full re-solves
 
     @property
     def cache_hit_rate(self) -> float:
@@ -889,6 +894,9 @@ class SelectStats:
                   f"quarantined={self.quarantined}")
         if self.resumes:
             s += f" resumes={self.resumes}"
+        if self.admits or self.evicts or self.downdates or self.resolves:
+            s += (f" admits={self.admits} evicts={self.evicts} "
+                  f"downdates={self.downdates} resolves={self.resolves}")
         return s
 
 

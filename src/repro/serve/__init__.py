@@ -19,7 +19,8 @@ from repro.serve.registry import PoolEntry, PoolRegistry, UnknownPool
 from repro.serve.scheduler import (PRIORITIES, RequestScheduler,
                                    SelectRequest, Ticket)
 from repro.serve.service import SelectionService
-from repro.serve.sessions import Session, SessionGone, SessionStore
+from repro.serve.sessions import (Session, SessionGone, SessionStore,
+                                  StreamSession)
 
 __all__ = [
     "AdmissionController", "AdmissionError", "Arrival", "BreakerBoard",
@@ -29,5 +30,5 @@ __all__ = [
     "make_arrivals", "run_load", "PoolEntry",
     "PoolRegistry", "RetryExhausted", "RetryPolicy", "UnknownPool",
     "RequestScheduler", "SelectRequest", "Ticket", "SelectionService",
-    "Session", "SessionGone", "SessionStore",
+    "Session", "SessionGone", "SessionStore", "StreamSession",
 ]

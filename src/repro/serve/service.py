@@ -27,7 +27,9 @@ from __future__ import annotations
 from typing import Optional
 
 import jax.numpy as jnp
+import numpy as np
 
+from repro.continual.buffer import BufferMaintainer
 from repro.core.gradmatch import SelectionResult, _normalize
 from repro.core.omp import (omp_session_extend, omp_session_start,
                             session_prefix_result, session_result)
@@ -84,6 +86,10 @@ class SelectionService:
         self.retry_policy = retry_policy
         self.sessions = SessionStore(max_sessions=max_sessions,
                                      ttl_s=session_ttl_s, **clock_kw)
+        # Continual streams get their own store: the degradation ladder's
+        # prefix scan over ``self.sessions`` expects anytime OMP state.
+        self.streams = SessionStore(max_sessions=max_sessions,
+                                    ttl_s=session_ttl_s, **clock_kw)
 
     # -- pools ---------------------------------------------------------------
     def register_pool(self, pool, pool_id: Optional[str] = None,
@@ -192,6 +198,67 @@ class SelectionService:
     def close_session(self, session_id: str) -> bool:
         return self.sessions.close(session_id)
 
+    # -- continual streams (DESIGN.md §11) -----------------------------------
+    def open_stream(self, d: int, k: int, target, capacity: int = 1024,
+                    tenant: str = "default", lam: float = 0.5,
+                    eps: float = 1e-10, positive: bool = True,
+                    seed: int = 0, compress: bool = True,
+                    checkpoint_dir: Optional[str] = None,
+                    checkpoint_every: int = 1) -> str:
+        """Open an infinite-stream session: the tenant will POST gradient
+        batches forever via :meth:`push_stream` against one bounded
+        ``BufferMaintainer``.  The explicit ``target`` is required — a
+        stream has no pool to sum.  Admission charges one buffer-solve of
+        units up front (the arena allocation + worst-case re-solve);
+        every push then pays per-batch.  With ``checkpoint_dir`` set, a
+        previously killed stream resumes bit-exactly from its last
+        snapshot (and keeps snapshotting every ``checkpoint_every``
+        batches)."""
+        cost = estimate_cost(int(capacity), int(d), int(k))
+        self.admission.admit(tenant, cost, self.scheduler.pending())
+        try:
+            maintainer = (BufferMaintainer.restore(checkpoint_dir)
+                          if checkpoint_dir else None)
+            if maintainer is None:
+                maintainer = BufferMaintainer(
+                    capacity=int(capacity), d=int(d), target=target,
+                    k=int(k), lam=lam, eps=eps, positive=positive,
+                    seed=seed, compress=compress,
+                    checkpoint_dir=checkpoint_dir,
+                    checkpoint_every=checkpoint_every)
+        except Exception:
+            self.admission.complete(tenant, refund=cost)
+            raise
+        self.admission.complete(tenant)
+        return self.streams.put_stream(tenant, maintainer).session_id
+
+    def push_stream(self, stream_id: str, rows, gids=None
+                    ) -> SelectionResult:
+        """Admit one batch into a stream; returns the maintained coreset
+        (gid space, ``SelectStats`` attached — admit/evict/downdate/
+        resolve counters included).  Per-batch admission units scale with
+        the batch, not the buffer; a failed admit refunds them."""
+        sess = self.streams.get(stream_id)            # raises SessionGone
+        rows = np.asarray(rows, np.float32)
+        m = sess.maintainer
+        cost = estimate_cost(rows.shape[0], m.d, m.k)
+        self.admission.admit(sess.tenant, cost, self.scheduler.pending())
+        try:
+            m.admit(rows, gids=gids)
+        except Exception:
+            self.admission.complete(sess.tenant, refund=cost)
+            raise
+        self.admission.complete(sess.tenant)
+        sess.batches += 1
+        return m.result()
+
+    def stream_result(self, stream_id: str) -> SelectionResult:
+        """Current maintained coreset without admitting anything."""
+        return self.streams.get(stream_id).maintainer.result()
+
+    def close_stream(self, stream_id: str) -> bool:
+        return self.streams.close(stream_id)
+
     @staticmethod
     def _session_selection(state) -> SelectionResult:
         idx, w, mask, err = session_result(state)
@@ -225,6 +292,7 @@ class SelectionService:
         return {"registry": self.registry.stats(),
                 "scheduler": self.scheduler.stats(),
                 "sessions": self.sessions.stats(),
+                "streams": self.streams.stats(),
                 "tenants": self.admission.stats(),
                 "breakers": self.breakers.stats()}
 

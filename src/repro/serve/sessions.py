@@ -29,7 +29,7 @@ import itertools
 import time
 from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Callable, Optional
+from typing import Any, Callable, Optional
 
 from repro.core.omp import OMPAnytimeState
 
@@ -51,6 +51,24 @@ class Session:
     extensions: int = 0
 
 
+@dataclass
+class StreamSession:
+    """A continual-stream session: one tenant POSTing gradient batches
+    forever against a bounded ``repro.continual.BufferMaintainer``
+    (DESIGN.md §11).  Unlike an anytime :class:`Session` there is no pool
+    id — the buffer *is* the pool, fed incrementally — but the TTL/LRU
+    bookkeeping is shared: an abandoned stream must not pin its arena.
+    The compute half (admission charging, batch pushes, checkpointed
+    resume) lives in ``serve/service.py``."""
+
+    session_id: str
+    tenant: str
+    maintainer: Any          # repro.continual.BufferMaintainer
+    created_at: float
+    last_used: float
+    batches: int = 0
+
+
 class SessionStore:
     def __init__(self, max_sessions: int = 32, ttl_s: float = 600.0,
                  clock: Callable[[], float] = time.monotonic):
@@ -68,19 +86,35 @@ class SessionStore:
         self.hits = 0
         self.misses = 0
 
-    def put(self, pool_id: str, tenant: str, state: OMPAnytimeState,
-            pool_fingerprint: str = "") -> Session:
-        now = self._clock()
-        sid = f"sess-{next(self._ids)}"
-        sess = Session(session_id=sid, pool_id=pool_id,
-                       pool_fingerprint=pool_fingerprint, tenant=tenant,
-                       state=state, created_at=now, last_used=now)
-        self._sessions[sid] = sess
+    def _insert(self, sess) -> None:
+        self._sessions[sess.session_id] = sess
         self.puts += 1
         self.sweep()
         while len(self._sessions) > self.max_sessions:
             self._sessions.popitem(last=False)
             self.evictions += 1
+
+    def put(self, pool_id: str, tenant: str, state: OMPAnytimeState,
+            pool_fingerprint: str = "") -> Session:
+        now = self._clock()
+        sess = Session(session_id=f"sess-{next(self._ids)}",
+                       pool_id=pool_id, pool_fingerprint=pool_fingerprint,
+                       tenant=tenant, state=state, created_at=now,
+                       last_used=now)
+        self._insert(sess)
+        return sess
+
+    def put_stream(self, tenant: str, maintainer) -> StreamSession:
+        """Register a continual :class:`StreamSession`.  Streams share the
+        anytime sessions' TTL/LRU machinery (``get``/``sweep``/``close``
+        only touch ``session_id``/``last_used``) but should live in their
+        *own* store — the degradation ladder's prefix scan expects anytime
+        state (``serve/service.py`` keeps ``svc.streams`` separate)."""
+        now = self._clock()
+        sess = StreamSession(session_id=f"stream-{next(self._ids)}",
+                             tenant=tenant, maintainer=maintainer,
+                             created_at=now, last_used=now)
+        self._insert(sess)
         return sess
 
     def get(self, session_id: str) -> Session:

@@ -1,0 +1,504 @@
+"""Continual-stream selection: differential + lifecycle tests.
+
+The contract under test (DESIGN.md §11): after every admitted batch, the
+``BufferMaintainer``'s committed solution is index-exact (weights to f32
+tolerance) against a **from-scratch** solve over the rows currently
+surviving in the buffer; decremental downdates match from-scratch solves
+on the surviving pool; a killed stream resumes **bit**-exactly.
+
+``FAULT_SEED`` parametrizes the fault-schedule tests (CI's fault-suite
+job runs this file under three seeds) — schedules are pure functions of
+the seed, so failures replay byte-for-byte.
+"""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.continual import BufferMaintainer, continual_select
+from repro.core import omp
+from repro.core import selection as sel_lib
+from repro.core.decremental import (certify_admission, omp_downdate,
+                                    session_extend_traced, session_truncate)
+from repro.core.gradmatch import gradmatch
+from repro.core.streaming import SelectStats, StreamingPassBudgetError
+from repro.resilience import RetryPolicy, TransientFault, with_retries
+from repro.serve import SelectionService, SessionGone
+
+SEED = int(os.environ.get("FAULT_SEED", "7"))
+
+
+def _pool(seed, n, d, dups=True):
+    rng = np.random.default_rng(seed)
+    g = rng.standard_normal((n, d)).astype(np.float32)
+    if dups and n >= 8:
+        g[n // 2] = g[1]            # duplicate rows: tie-breaking must
+        g[n - 2] = g[1]             # not depend on arrival order
+    return g
+
+
+def _feed(m, g, bs):
+    n = g.shape[0]
+    for lo in range(0, n, bs):
+        hi = min(lo + bs, n)
+        m.admit(g[lo:hi], gids=np.arange(lo, hi, dtype=np.int64))
+    return m
+
+
+def _assert_matches_scratch(m, what):
+    """Maintained slot-space solution == from-scratch solve on the
+    surviving buffer rows (the tentpole differential guarantee)."""
+    pool, ok = m.pool_view()
+    idx, w, mask, err = m.slot_result()
+    fresh = omp.omp_session_start(pool, m.target, m.k, valid=ok,
+                                  lam=m.lam, eps=m.eps,
+                                  positive=m.positive, block=m.block)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(fresh.indices),
+                                  err_msg=f"{what}: indices diverged")
+    np.testing.assert_array_equal(np.asarray(mask), np.asarray(fresh.mask),
+                                  err_msg=f"{what}: mask diverged")
+    np.testing.assert_allclose(np.asarray(w), np.asarray(fresh.weights),
+                               rtol=2e-4, atol=2e-5,
+                               err_msg=f"{what}: weights diverged")
+    np.testing.assert_allclose(float(err), float(fresh.err), rtol=1e-4,
+                               err_msg=f"{what}: err diverged")
+
+
+# ---------------------------------------------------------------------------
+# tentpole differential: (n, k, batch_size, buffer_cap) grid
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,d,k,bs,cap", [
+    (64, 8, 8, 16, 32),      # roomy buffer: mostly free evictions
+    (96, 8, 12, 8, 16),      # tight buffer: committed evictions (downdates)
+    (48, 24, 6, 6, 48),      # capacity covers the pool: nothing evicted
+    (40, 8, 16, 8, 12),      # k >= buffer: degenerate re-pick rounds
+    (64, 24, 10, 32, 24),    # wide-ish proxies, batch > capacity wave split
+])
+def test_differential_after_every_batch(n, d, k, bs, cap):
+    g = _pool(SEED, n, d)
+    tgt = jnp.sum(jnp.asarray(g), axis=0)
+    m = BufferMaintainer(capacity=cap, d=d, target=tgt, k=k,
+                         compress=False, seed=SEED)
+    for lo in range(0, n, bs):
+        hi = min(lo + bs, n)
+        m.admit(g[lo:hi], gids=np.arange(lo, hi, dtype=np.int64))
+        _assert_matches_scratch(m, f"n={n} k={k} bs={bs} cap={cap} @row{hi}")
+    assert m.stats.admits == n
+    if cap < n:
+        assert m.stats.evicts > 0
+
+
+def test_differential_vs_omp_select_smoke():
+    """Cross-engine check at a friendly size: the maintained buffer also
+    matches the one-shot ``omp_select`` (default block) on the surviving
+    rows — the wording of the issue's guarantee."""
+    g = _pool(3, 96, 16, dups=True)
+    tgt = jnp.sum(jnp.asarray(g), axis=0)
+    m = _feed(BufferMaintainer(capacity=40, d=16, target=tgt, k=12,
+                               compress=False, seed=3), g, 16)
+    pool, ok = m.pool_view()
+    idx, w, mask, err = m.slot_result()
+    i2, w2, m2, _ = omp.omp_select(pool, tgt, 12, valid=ok)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(i2))
+    np.testing.assert_allclose(np.asarray(w), np.asarray(w2),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_compressed_storage_still_exact():
+    """compress=True solves the *stored* (bf16-rounded) rows — exactness
+    is against what survives in the arena, by construction."""
+    g = _pool(11, 80, 8)
+    tgt = jnp.sum(jnp.asarray(g), axis=0)
+    m = _feed(BufferMaintainer(capacity=24, d=8, target=tgt, k=8,
+                               compress=True, seed=11), g, 10)
+    pool, ok = m.pool_view()
+    np.testing.assert_array_equal(
+        np.asarray(pool), np.asarray(m._rows_bf.astype(jnp.float32)))
+    _assert_matches_scratch(m, "compressed")
+
+
+def test_invalidated_rows_leave_the_solution():
+    """Masked-rows grid point: upstream retraction of committed rows goes
+    through the decremental path and the invariant still holds."""
+    g = _pool(SEED + 1, 64, 8, dups=False)
+    tgt = jnp.sum(jnp.asarray(g), axis=0)
+    m = _feed(BufferMaintainer(capacity=32, d=8, target=tgt, k=10,
+                               compress=False, seed=SEED), g, 16)
+    committed = [int(i) for i in np.asarray(m.result().indices) if i >= 0]
+    dropped = committed[:3] + [9999]       # unknown gids are a no-op
+    assert m.invalidate(dropped) == 3
+    assert m.stats.downdates >= 3
+    _assert_matches_scratch(m, "after invalidate")
+    left = np.asarray(m.result().indices)
+    assert not np.isin(left[left >= 0], committed[:3]).any()
+    # non-committed invalidation is free (no replay rounds charged)
+    rounds_before = m.stats.rounds
+    spectator = [int(gid) for gid in m._gids[m._ok]
+                 if int(gid) not in left[left >= 0]][:1]
+    if spectator:
+        m.invalidate(spectator)
+        assert m.stats.rounds == rounds_before
+        _assert_matches_scratch(m, "after free invalidate")
+
+
+def test_capacity_covering_pool_matches_gradmatch():
+    """buffer_cap=None == pooled gradmatch: the free-parity case."""
+    g = _pool(2, 72, 12, dups=False)
+    ref = gradmatch(jnp.asarray(g), 10)
+    got = continual_select(g, 10, batch=24)
+    np.testing.assert_array_equal(np.asarray(got.indices),
+                                  np.asarray(ref.indices))
+    np.testing.assert_allclose(np.asarray(got.weights),
+                               np.asarray(ref.weights), rtol=2e-4,
+                               atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# decremental OMP: downdate + truncate differentials
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("which", ["last", "middle", "first"])
+def test_downdate_matches_scratch_on_surviving_rows(which):
+    n, d, k = 96, 16, 12
+    g = jnp.asarray(_pool(5, n, d))
+    tgt = jnp.sum(g, axis=0)
+    sess = omp.omp_session_start(g, tgt, k)
+    ind = np.asarray(sess.indices)
+    pick = {"last": ind[k - 1], "middle": ind[k // 2], "first": ind[0]}[which]
+    down, info = omp_downdate(g, sess, int(pick))
+    assert info.replayed == {"last": 0, "middle": k - 1 - k // 2,
+                             "first": k - 1}[which]
+    assert info.resolved == (which == "first")
+    surviving = jnp.ones((n,), bool).at[int(pick)].set(False)
+    # downdate leaves a (k-1)-round solution over the surviving rows ...
+    ref = omp.omp_session_start(g, tgt, k - 1, valid=surviving)
+    np.testing.assert_array_equal(np.asarray(down.indices),
+                                  np.asarray(ref.indices))
+    np.testing.assert_allclose(np.asarray(down.weights),
+                               np.asarray(ref.weights), rtol=2e-4,
+                               atol=2e-5)
+    # ... and a follow-up extend matches the from-scratch omp_select at k
+    ext = omp.omp_session_extend(g, down, k)
+    i2, w2, m2, _ = omp.omp_select(g, tgt, k, valid=surviving)
+    np.testing.assert_array_equal(np.asarray(ext.indices), np.asarray(i2))
+    np.testing.assert_allclose(np.asarray(ext.weights), np.asarray(w2),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_downdate_rejects_non_committed():
+    g = jnp.asarray(_pool(6, 32, 8, dups=False))
+    sess = omp.omp_session_start(g, jnp.sum(g, 0), 4)
+    loser = next(i for i in range(32)
+                 if i not in np.asarray(sess.indices).tolist())
+    with pytest.raises(ValueError, match="not committed"):
+        omp_downdate(g, sess, loser)
+
+
+@pytest.mark.parametrize("t", [0, 1, 5, 9])
+def test_truncate_matches_fresh_prefix(t):
+    n, d, k = 64, 8, 9
+    g = jnp.asarray(_pool(8, n, d))
+    tgt = jnp.sum(g, axis=0)
+    sess = omp.omp_session_start(g, tgt, k)
+    cut = session_truncate(sess, t)
+    fresh = omp.omp_session_start(g, tgt, t) if t else None
+    assert cut.k == t
+    if t:
+        np.testing.assert_array_equal(np.asarray(cut.indices),
+                                      np.asarray(fresh.indices))
+        np.testing.assert_allclose(np.asarray(cut.weights),
+                                   np.asarray(fresh.weights), rtol=2e-4,
+                                   atol=2e-5)
+    # re-extending recovers the original solve
+    back = omp.omp_session_extend(g, cut, k)
+    np.testing.assert_array_equal(np.asarray(back.indices),
+                                  np.asarray(sess.indices))
+
+
+def test_traced_extend_matches_block_extend():
+    n, d, k = 48, 8, 10
+    g = jnp.asarray(_pool(9, n, d))
+    tgt = jnp.sum(g, axis=0)
+    blocked = omp.omp_session_start(g, tgt, k)
+    base = session_truncate(blocked, 0)
+    traced, trace = session_extend_traced(g, base, k)
+    np.testing.assert_array_equal(np.asarray(traced.indices),
+                                  np.asarray(blocked.indices))
+    np.testing.assert_array_equal(np.asarray(traced.st.weights),
+                                  np.asarray(blocked.st.weights))
+    assert trace.resid.shape == (k, d) and trace.win.shape == (k,)
+    assert np.isfinite(trace.win).all()
+    # the recorded winner gains dominate a zero newcomer (certified keep)
+    assert certify_admission(np.zeros((3, d), np.float32), trace, k) == k
+    # a newcomer equal to round 0's winner cannot be certified past it
+    hot = np.asarray(g)[int(np.asarray(traced.indices)[0])][None, :]
+    assert certify_admission(hot, trace, k) == 0
+
+
+# ---------------------------------------------------------------------------
+# kill / resume
+# ---------------------------------------------------------------------------
+
+def test_kill_resume_bit_exact(tmp_path):
+    n, d, k, bs, cap = 96, 8, 10, 8, 20
+    g = _pool(SEED + 2, n, d)
+    tgt = jnp.sum(jnp.asarray(g), axis=0)
+
+    never_killed = _feed(BufferMaintainer(capacity=cap, d=d, target=tgt,
+                                          k=k, compress=True, seed=SEED),
+                         g, bs)
+
+    ckpt = str(tmp_path / "stream")
+    m = BufferMaintainer(capacity=cap, d=d, target=tgt, k=k, compress=True,
+                         seed=SEED, checkpoint_dir=ckpt)
+    kill_after = 5
+    for i, lo in enumerate(range(0, n, bs)):
+        if i == kill_after:
+            break
+        m.admit(g[lo:lo + bs], gids=np.arange(lo, lo + bs, dtype=np.int64))
+    del m                                             # "killed" here
+
+    res = BufferMaintainer.restore(ckpt)
+    assert res is not None and res.batches == kill_after
+    assert res.stats.resumes == 1
+    for i, lo in enumerate(range(0, n, bs)):
+        if i < kill_after:
+            continue
+        hi = min(lo + bs, n)
+        res.admit(g[lo:hi], gids=np.arange(lo, hi, dtype=np.int64))
+
+    for a, b in zip(never_killed.slot_result(), res.slot_result()):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(never_killed._pool),
+                                  np.asarray(res._pool))
+    np.testing.assert_array_equal(never_killed._gids, res._gids)
+    np.testing.assert_array_equal(
+        never_killed._trace.win, res._trace.win)
+
+
+def test_restore_empty_dir_returns_none(tmp_path):
+    assert BufferMaintainer.restore(str(tmp_path / "nothing")) is None
+
+
+# ---------------------------------------------------------------------------
+# stats counters (satellite: SelectStats surface)
+# ---------------------------------------------------------------------------
+
+def test_counters_surface_in_summary():
+    s = SelectStats()
+    assert "admits=" not in s.summary()       # quiet until continual runs
+    s.admits, s.evicts, s.downdates, s.resolves = 40, 7, 3, 1
+    out = s.summary()
+    assert "admits=40 evicts=7 downdates=3 resolves=1" in out
+    # ... and StreamingPassBudgetError messages carry them for free
+    err = StreamingPassBudgetError(2, s)
+    assert "downdates=3" in str(err)
+
+
+def test_maintainer_counters_account():
+    g = _pool(13, 80, 8)
+    tgt = jnp.sum(jnp.asarray(g), axis=0)
+    m = _feed(BufferMaintainer(capacity=16, d=8, target=tgt, k=10,
+                               compress=False, seed=13), g, 10)
+    assert m.stats.admits == 80
+    assert m.stats.evicts >= 80 - 16          # everything beyond capacity
+    assert m.stats.downdates > 0              # tight buffer forces them
+    assert m.result().stats is m.stats
+    assert "admits=80" in m.stats.summary()
+
+
+def test_memory_stays_flat():
+    g = _pool(17, 60, 8, dups=False)
+    tgt = jnp.sum(jnp.asarray(g), axis=0)
+    m = BufferMaintainer(capacity=12, d=8, target=tgt, k=6, compress=True)
+    sizes = []
+    for lo in range(0, 60, 6):
+        m.admit(g[lo:lo + 6])
+        sizes.append(m.memory_bytes())
+    assert len(set(sizes)) == 1, f"memory grew: {sizes}"
+
+
+# ---------------------------------------------------------------------------
+# selection.select dispatch + kwarg validation (satellite S1)
+# ---------------------------------------------------------------------------
+
+def test_select_dispatch_continual():
+    g = jnp.asarray(_pool(1, 48, 8, dups=False))
+    sel = sel_lib.select("gradmatch-continual", jax.random.PRNGKey(0), g,
+                         k=8, buffer_cap=24, continual_batch=16)
+    idx = np.asarray(sel.indices)
+    msk = np.asarray(sel.mask)
+    assert ((idx[msk] >= 0) & (idx[msk] < 48)).all()
+    assert abs(float(np.asarray(sel.weights)[msk].sum()) - 1.0) < 1e-4
+    assert sel.stats is not None and sel.stats.evicts > 0
+
+
+def test_select_rejects_unknown_strategy():
+    g = jnp.asarray(_pool(1, 16, 4, dups=False))
+    with pytest.raises(ValueError, match="unknown strategy"):
+        sel_lib.select("gradmatch-typo", jax.random.PRNGKey(0), g, k=4)
+
+
+@pytest.mark.parametrize("strategy", ["gradmatch", "craig-lazy", "random"])
+def test_select_rejects_partitions_on_wrong_strategy(strategy):
+    g = jnp.asarray(_pool(1, 16, 4, dups=False))
+    with pytest.raises(ValueError, match="silently ignored"):
+        sel_lib.select(strategy, jax.random.PRNGKey(0), g, k=4,
+                       partitions=2)
+
+
+def test_select_rejects_bad_partition_count():
+    g = jnp.asarray(_pool(1, 16, 4, dups=False))
+    with pytest.raises(ValueError, match="partitions must be >= 1"):
+        sel_lib.select("gradmatch-partitioned", jax.random.PRNGKey(0), g,
+                       k=4, partitions=0)
+
+
+def test_select_accepts_explicit_partitions():
+    g = jnp.asarray(_pool(1, 32, 8, dups=False))
+    sel = sel_lib.select("gradmatch-partitioned", jax.random.PRNGKey(0), g,
+                         k=8, partitions=2)
+    assert int(np.asarray(sel.mask).sum()) >= 1
+
+
+@pytest.mark.parametrize("kw", [{"buffer_cap": 8}, {"continual_batch": 8}])
+def test_select_rejects_continual_kwargs_elsewhere(kw):
+    g = jnp.asarray(_pool(1, 16, 4, dups=False))
+    with pytest.raises(ValueError, match="gradmatch-continual"):
+        sel_lib.select("gradmatch", jax.random.PRNGKey(0), g, k=4, **kw)
+
+
+@pytest.mark.parametrize("kw", [{"buffer_cap": 0}, {"continual_batch": -1}])
+def test_select_rejects_nonpositive_continual_kwargs(kw):
+    g = jnp.asarray(_pool(1, 16, 4, dups=False))
+    with pytest.raises(ValueError, match="must be >= 1"):
+        sel_lib.select("gradmatch-continual", jax.random.PRNGKey(0), g,
+                       k=4, **kw)
+
+
+# ---------------------------------------------------------------------------
+# serve stream sessions
+# ---------------------------------------------------------------------------
+
+def test_serve_stream_lifecycle():
+    rng = np.random.default_rng(SEED)
+    svc = SelectionService()
+    tgt = rng.standard_normal(8).astype(np.float32)
+    sid = svc.open_stream(d=8, k=6, target=tgt, capacity=24, tenant="t1")
+    res = None
+    for _ in range(6):
+        res = svc.push_stream(sid,
+                              rng.standard_normal((8, 8)).astype(np.float32))
+    assert res.stats.admits == 48
+    st = svc.stats()
+    assert st["streams"]["sessions"] == 1 and st["streams"]["hits"] == 6
+    assert svc.stats()["tenants"]["t1"]["admitted"] == 7   # open + 6 pushes
+    # result endpoint does not admit anything
+    again = svc.stream_result(sid)
+    assert again.stats.admits == 48
+    assert svc.close_stream(sid)
+    with pytest.raises(SessionGone):
+        svc.push_stream(sid, rng.standard_normal((4, 8)))
+
+
+def test_serve_stream_refunds_failed_push():
+    svc = SelectionService(default_budget_units=1e6)
+    sid = svc.open_stream(d=8, k=4, target=np.ones(8, np.float32),
+                          capacity=16, tenant="t2")
+    used = svc.stats()["tenants"]["t2"]["used_units"]
+    with pytest.raises(ValueError, match="incompatible"):
+        svc.push_stream(sid, np.ones((4, 5), np.float32))   # wrong d
+    assert svc.stats()["tenants"]["t2"]["used_units"] == used
+    assert svc.stats()["tenants"]["t2"]["inflight"] == 0
+
+
+def test_serve_stream_checkpoint_resume(tmp_path):
+    rng = np.random.default_rng(SEED)
+    batches = [rng.standard_normal((6, 8)).astype(np.float32)
+               for _ in range(8)]
+    tgt = np.sum(np.concatenate(batches), axis=0)
+    ckpt = str(tmp_path / "svc-stream")
+
+    ref = BufferMaintainer(capacity=16, d=8, target=tgt, k=6,
+                           compress=True, seed=0)
+    gid = 0
+    for b in batches:
+        ref.admit(b, gids=np.arange(gid, gid + 6, dtype=np.int64))
+        gid += 6
+
+    svc = SelectionService()
+    sid = svc.open_stream(d=8, k=6, target=tgt, capacity=16, seed=0,
+                          checkpoint_dir=ckpt)
+    gid = 0
+    for b in batches[:4]:
+        svc.push_stream(sid, b, gids=np.arange(gid, gid + 6,
+                                               dtype=np.int64))
+        gid += 6
+    svc.close_stream(sid)                       # "killed" mid-stream
+
+    sid2 = svc.open_stream(d=8, k=6, target=tgt, capacity=16, seed=0,
+                           checkpoint_dir=ckpt)   # resumes from snapshot
+    res = None
+    for b in batches[4:]:
+        res = svc.push_stream(sid2, b, gids=np.arange(gid, gid + 6,
+                                                      dtype=np.int64))
+        gid += 6
+    assert res.stats.resumes == 1
+    np.testing.assert_array_equal(np.asarray(res.indices),
+                                  np.asarray(ref.result().indices))
+    m2 = svc.streams.get(sid2).maintainer
+    for a, b in zip(ref.slot_result(), m2.slot_result()):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# fault-suite coverage (FAULT_SEED drives the schedule)
+# ---------------------------------------------------------------------------
+
+def test_flaky_delivery_matches_fault_free():
+    """Transient batch-delivery faults retried away leave the eviction
+    schedule and the maintained solution bit-identical to the fault-free
+    stream — the admission RNG is keyed on (seed, batch counter), never
+    on wall-clock or attempt counts."""
+    rng = np.random.default_rng(SEED)
+    batches = [rng.standard_normal((8, 8)).astype(np.float32)
+               for _ in range(10)]
+    tgt = np.sum(np.concatenate(batches), axis=0)
+    policy = RetryPolicy(max_retries=3, backoff_s=0.0,
+                         sleep=lambda s: None)
+
+    frng = np.random.default_rng((SEED, 1234))
+    fault_batches = set(frng.choice(len(batches), size=3, replace=False))
+
+    def run(faulty):
+        m = BufferMaintainer(capacity=20, d=8, target=tgt, k=6,
+                             compress=True, seed=SEED)
+        injected = 0
+        for i, b in enumerate(batches):
+            state = {"tries": 0}
+
+            def deliver():
+                state["tries"] += 1
+                if faulty and state["tries"] == 1 and i in fault_batches:
+                    raise TransientFault(f"flaky delivery, batch {i}")
+                return b
+
+            rows = with_retries(deliver, policy)
+            injected += state["tries"] - 1
+            m.admit(rows, gids=np.arange(i * 8, i * 8 + 8,
+                                         dtype=np.int64))
+        return m, injected
+
+    clean, _ = run(False)
+    dirty, injected = run(True)
+    assert injected > 0, "fault schedule injected nothing at this seed"
+    for a, b in zip(clean.slot_result(), dirty.slot_result()):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(clean._pool),
+                                  np.asarray(dirty._pool))
+    assert clean.stats.evicts == dirty.stats.evicts
+    assert clean.stats.downdates == dirty.stats.downdates

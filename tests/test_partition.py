@@ -67,10 +67,41 @@ def _check_result(res, n):
     ([0, 4, 0], 3, [0, 3, 0]),      # empty partitions get nothing
     ([4, 4], 0, [0, 0]),            # zero budget
     ([3, 5], 8, [3, 5]),            # exact fill
+    ([0, 0, 0], 5, [0, 0, 0]),      # every class empty: nothing to place
+    ([5] * 7, 3, [1, 1, 1, 0, 0, 0, 0]),   # C > k starvation: equal sizes
+                                    # tie-break by class id, 4 starve
+    ([1, 9, 1], 2, [1, 1, 0]),      # C > k: one each to largest-first
 ])
 def test_split_budget_cases(sizes, k, want):
     got = split_budget(k, np.asarray(sizes, np.int64))
     np.testing.assert_array_equal(got, np.asarray(want, np.int64))
+
+
+def test_split_budget_rejects_bad_sizes():
+    with pytest.raises(ValueError, match="non-empty"):
+        split_budget(4, np.asarray([], np.int64))
+    with pytest.raises(ValueError, match="negative"):
+        split_budget(4, np.asarray([3, -1], np.int64))
+
+
+def test_split_budget_starvation_sums_exactly():
+    # C > k never over- or under-places: the starved classes are exactly
+    # the smallest (ties broken by id), and the quota still sums to k.
+    sizes = np.asarray([2, 7, 1, 7, 3], np.int64)
+    q = split_budget(3, sizes)
+    assert q.sum() == 3
+    assert int((q == 0).sum()) == 2
+    np.testing.assert_array_equal(q, [0, 1, 0, 1, 1])
+
+
+def test_per_class_all_rows_invalid():
+    # Every label out of range: no class has members, the selection is
+    # empty rather than an error (the trainer sees an all-masked result).
+    g = _pool(9, 20, 8)
+    labels = np.full(20, -1, np.int64)
+    res = gm_lib.gradmatch_per_class(jnp.asarray(g), jnp.asarray(labels),
+                                     4, 6)
+    assert int(np.asarray(res.mask).sum()) == 0
 
 
 @pytest.mark.parametrize("seed", range(5))
