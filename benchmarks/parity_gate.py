@@ -40,6 +40,12 @@ Checks, all against artifacts committed in the repo:
    sequential baseline's sustained req/s with p99 within the SLO, both
    runs clean on the shed-accounting invariants; an undersized service
    must shed best-effort traffic — labelled, never charged.
+8. **Artifact fast path** (DESIGN.md §12): at pool = 8192 / k = 512, a
+   precomputed trajectory served through the scheduler must be
+   bit-identical to the live anytime session engine at 3 budgets,
+   objective-equal (1%) to the live certified batched path, and answer
+   >= 20x faster than the live submit+drain — with the shed-style
+   accounting invariant intact.
 
 Exit code 0 = gate passed.  ``python -m benchmarks.parity_gate``
 """
@@ -600,6 +606,103 @@ def check_continual(n=1024, d=32, k=24, cap=96, bs=48, down_pool=2048,
     return ok
 
 
+def check_artifacts(n=8192, d=64, k=512, min_speedup=20.0,
+                    err_rtol=0.01) -> bool:
+    """Artifact fast-path gate (DESIGN.md §12) at the headline serve
+    shape.  Three claims, all end-to-end through the service:
+
+    * **bit-exactness at 3 k-slices**: the artifact-served ticket
+      (``degradation="artifact"``) must be bit-identical — indices,
+      mask, normalized weights, err — to the live anytime session
+      engine at k in {1, k/2, k}.  (The one-shot ``omp_select`` pads
+      its solve to narrower prefix widths than the session engine; at
+      this pool size the resulting 1-ulp score differences flip
+      near-tie argmaxes, so the two *live* paths themselves diverge
+      bit-wise — the artifact records the session engine, the rung
+      extension serving runs on, and is gated against the certified
+      batched path at the objective level instead.)
+    * **objective parity vs the live certified path**: residual err
+      within ``err_rtol``.
+    * **>= min_speedup x**: answering from the artifact at submit must
+      beat the live certified submit+drain by >= 20x.
+    """
+    import tempfile
+    import time as _time
+
+    from repro.artifacts import ArtifactStore, build_artifact
+    from repro.core.gradmatch import _normalize
+    from repro.core.omp import omp_session_start
+    from repro.serve.service import SelectionService
+
+    g = np.asarray(jax.random.normal(jax.random.PRNGKey(23), (n, d)),
+                   np.float32)
+    with tempfile.TemporaryDirectory() as root:
+        svc = SelectionService(artifact_store=ArtifactStore(root))
+        pid = svc.register_pool(g)
+        entry = svc.registry.get(pid)
+        tgt = np.asarray(entry.target_sum, np.float32)
+        t0 = _time.perf_counter()
+        build_artifact(svc.artifacts, g, tgt, k,
+                       fingerprint=entry.content_digest)
+        build_s = _time.perf_counter() - t0
+
+        live = SelectionService()                 # no artifacts: live path
+        live_pid = live.register_pool(g)
+
+        exact = True
+        err_ok = True
+        for kq in sorted({1, k // 2, k}):
+            t = svc.submit(pid, kq)
+            hit = t.status == "done" and t.degradation == "artifact"
+            sess = omp_session_start(g, tgt, kq)
+            sw = np.asarray(_normalize(jnp.asarray(sess.weights),
+                                       jnp.asarray(sess.mask)))
+            bit = (hit
+                   and np.array_equal(np.asarray(t.result.indices),
+                                      np.asarray(sess.indices))
+                   and np.array_equal(np.asarray(t.result.mask),
+                                      np.asarray(sess.mask))
+                   and np.array_equal(np.asarray(t.result.weights), sw)
+                   and np.array_equal(np.asarray(t.result.err),
+                                      np.asarray(sess.err)))
+            lt = live.submit(live_pid, kq)
+            live.drain()
+            art_err = float(np.asarray(t.result.err))
+            live_err = float(np.asarray(lt.result.err))
+            erel = abs(art_err - live_err) / max(abs(live_err), 1e-9)
+            print(f"parity_gate,check=artifacts,k={kq},hit={hit},"
+                  f"bit_exact_vs_session={bit},err_rel={erel:.5f},"
+                  f"rung={t.degradation}", flush=True)
+            exact &= bit
+            err_ok &= erel <= err_rtol
+
+        def artifact_hit():
+            tt = svc.submit(pid, k)
+            assert tt.degradation == "artifact"
+
+        def live_solve():
+            live.submit(live_pid, k)
+            live.drain()
+
+        hit_ms = time_fn(artifact_hit, warmup=1, iters=5) * 1e3
+        live_ms = time_fn(live_solve, warmup=1, iters=3) * 1e3
+        speedup = live_ms / max(hit_ms, 1e-9)
+        speed_ok = speedup >= min_speedup
+
+        st = svc.stats()
+        acc = svc.scheduler.counters
+        acct_ok = (acc["admitted"] == acc["completed"] + acc["shed"]
+                   + acc["failed"] + svc.scheduler.pending())
+        ok = exact and err_ok and speed_ok and acct_ok
+        print(f"parity_gate,check=artifacts,pool={n},k={k},"
+              f"build_s={build_s:.1f},hit_ms={hit_ms:.3f},"
+              f"live_ms={live_ms:.1f},speedup={speedup:.1f},"
+              f"min={min_speedup},hits={st['registry']['artifact_hits']},"
+              f"quarantined={st['registry']['artifact_quarantined']},"
+              f"accounting_ok={acct_ok},ok={ok}", flush=True)
+        return ok
+
+
 def main() -> int:
     ok = check_streaming_parity()
     ok &= check_streaming_overhead()
@@ -611,6 +714,7 @@ def main() -> int:
     ok &= check_fault_recovery()
     ok &= check_partitioned()
     ok &= check_continual()
+    ok &= check_artifacts()
     print(f"parity_gate,{'PASS' if ok else 'FAIL'}", flush=True)
     return 0 if ok else 1
 

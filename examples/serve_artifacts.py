@@ -1,0 +1,98 @@
+"""Artifact fast path end to end (DESIGN.md §12).
+
+An offline pass solves a pool's anytime-OMP trajectory once and commits
+it to a content-addressed ``ArtifactStore``; a serving process pointed
+at the same store then answers every covered budget straight from disk
+— verified, memoized, rung ``"artifact"``, off the drain path.  The run
+then turns adversarial: a seeded bit-flip corrupts the artifact on
+disk, a fresh service must *quarantine* it on first read and fall
+through the live ladder to the identical selection — fail closed, never
+a corrupt answer.  Prints the hit/miss/quarantine accounting and fails
+if the differential or the fallback diverges.
+
+Run:  PYTHONPATH=src python examples/serve_artifacts.py
+      PYTHONPATH=src python examples/serve_artifacts.py --smoke  # CI
+"""
+
+import argparse
+import tempfile
+
+import numpy as np
+
+from repro.artifacts import ArtifactStore, build_artifact
+from repro.core.omp import omp_session_start
+from repro.resilience import inject_disk_fault
+from repro.serve import SelectionService
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes (CI configuration)")
+    ap.add_argument("--pool-size", type=int, default=4096)
+    ap.add_argument("--dim", type=int, default=64)
+    ap.add_argument("--k-max", type=int, default=128)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    if args.smoke:
+        args.pool_size, args.dim, args.k_max = 512, 32, 32
+
+    rng = np.random.default_rng(args.seed)
+    g = rng.standard_normal((args.pool_size, args.dim)).astype(np.float32)
+
+    with tempfile.TemporaryDirectory(prefix="artifact-store-") as root:
+        # -- offline: solve once, commit the trajectory -------------------
+        store = ArtifactStore(root)
+        svc = SelectionService(artifact_store=store)
+        pid = svc.register_pool(g)
+        entry = svc.registry.get(pid)
+        tgt = np.asarray(entry.target_sum, np.float32)
+        _, ident = build_artifact(store, g, tgt, args.k_max,
+                                  fingerprint=entry.content_digest)
+        print(f"serve_artifacts,built={ident},pool={args.pool_size},"
+              f"k_max={args.k_max}")
+
+        # -- online: every covered budget served at submit ----------------
+        hit_ok = True
+        for k in (1, args.k_max // 2, args.k_max):
+            t = svc.submit(pid, k)
+            sess = omp_session_start(g, tgt, k)
+            same = (t.status == "done"
+                    and t.degradation == "artifact"
+                    and np.array_equal(np.asarray(t.result.indices),
+                                       np.asarray(sess.indices)))
+            print(f"serve_artifacts,k={k},rung={t.degradation},"
+                  f"bit_exact_vs_live={same}")
+            hit_ok &= same
+        reg = svc.stats()["registry"]
+        print(f"serve_artifacts,hits={reg['artifact_hits']},"
+              f"misses={reg['artifact_misses']},"
+              f"quarantined={reg['artifact_quarantined']}")
+
+        # -- adversary: flip one bit on disk ------------------------------
+        info = inject_disk_fault(store, ident, "bit-flip", seed=args.seed)
+        print(f"serve_artifacts,fault=bit-flip,blob={info['blob']},"
+              f"byte={info['byte']},bit={info['bit']}")
+        cold = SelectionService(artifact_store=ArtifactStore(root))
+        cold_pid = cold.register_pool(g)
+        t = cold.submit(cold_pid, args.k_max)
+        if t.status != "done":
+            cold.drain()
+        sess = omp_session_start(g, tgt, args.k_max)
+        reg = cold.stats()["registry"]
+        fallback_ok = (t.status == "done"
+                       and t.degradation != "artifact"
+                       and reg["artifact_quarantined"] == 1
+                       and np.array_equal(np.asarray(t.result.indices),
+                                          np.asarray(sess.indices)))
+        print(f"serve_artifacts,after_fault_rung={t.degradation},"
+              f"quarantined={reg['artifact_quarantined']},"
+              f"fail_closed_same_answer={fallback_ok}")
+
+    ok = hit_ok and fallback_ok
+    print(f"serve_artifacts,{'PASS' if ok else 'FAIL'}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

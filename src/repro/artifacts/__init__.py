@@ -1,0 +1,31 @@
+"""Durable selection artifacts: content-addressed offline trajectories
+with end-to-end integrity and a fail-closed serve fast path.
+
+See DESIGN.md §12.  ``store`` is the crash-safe write half, ``verify``
+the fail-closed read half, ``build`` the offline solve-and-commit
+pipeline.
+"""
+
+from repro.artifacts.build import artifact_key_for, build_artifact
+from repro.artifacts.store import (
+    SCHEMA_VERSION,
+    ArtifactKey,
+    ArtifactStore,
+    SelectionArtifact,
+    content_digest_array,
+    target_sha256,
+)
+from repro.artifacts.verify import VerifyError, load_verified
+
+__all__ = [
+    "SCHEMA_VERSION",
+    "ArtifactKey",
+    "ArtifactStore",
+    "SelectionArtifact",
+    "VerifyError",
+    "artifact_key_for",
+    "build_artifact",
+    "content_digest_array",
+    "load_verified",
+    "target_sha256",
+]

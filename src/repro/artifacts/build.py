@@ -1,0 +1,91 @@
+"""Offline artifact builder: one anytime solve → one durable artifact.
+
+``build_artifact`` is what the launch pipeline
+(``repro.launch.build_artifacts``) and the serve warm path call: it runs
+``omp_session_trajectory`` to ``k_max`` over a pool, packages the
+trajectory with the target and the optional FL-scan cache, and commits
+it to an ``ArtifactStore`` under the pool's full-content digest.  The
+solve is the expensive part (an offline O(k_max) anytime solve); every
+later request at any ``k <= k_max`` is an O(1) verified slice.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.artifacts.store import (
+    ArtifactKey,
+    ArtifactStore,
+    content_digest_array,
+    target_sha256,
+)
+from repro.core.omp import omp_session_trajectory
+
+
+def artifact_key_for(grads, target, lam: float, eps: float,
+                     positive: bool, valid=None,
+                     fingerprint: Optional[str] = None) -> ArtifactKey:
+    """Key a (pool, target, params) tuple the way the builder does.
+
+    ``fingerprint`` short-circuits the O(n·d) content digest when the
+    caller (the registry) already computed it at pool admission.
+    """
+    if fingerprint is None:
+        fingerprint = content_digest_array(grads, valid)
+    return ArtifactKey(fingerprint=fingerprint, lam=float(lam),
+                       eps=float(eps), positive=bool(positive),
+                       target_sha=target_sha256(target))
+
+
+def build_artifact(
+    store: ArtifactStore,
+    grads,                     # (n, d) candidate pool
+    target,                    # (d,)
+    k_max: int,
+    lam: float = 0.5,
+    eps: float = 1e-10,
+    nnls_iters: int = 50,
+    positive: bool = True,
+    valid=None,
+    block: int = 128,
+    fingerprint: Optional[str] = None,
+    fl_l_max: Optional[float] = None,   # FL-scan cache (registry peek)
+    crash: Optional[Callable[[str], None]] = None,
+) -> tuple[ArtifactKey, str]:
+    """Solve to ``k_max`` and commit the trajectory; returns (key, ident).
+
+    ``crash`` is forwarded to ``ArtifactStore.put`` — the fault suite's
+    kill-during-commit hook.  ``fl_l_max`` (the pool's cached FL
+    similarity scan bound) rides along as an extra verified blob so an
+    artifact-warmed registry entry skips that pool scan too.
+    """
+    grads_np = np.ascontiguousarray(np.asarray(grads, np.float32))
+    target_np = np.ascontiguousarray(np.asarray(target, np.float32))
+    n, d = grads_np.shape
+    k_max = int(k_max)
+    key = artifact_key_for(grads_np, target_np, lam, eps, positive,
+                           valid=valid, fingerprint=fingerprint)
+
+    _, traj = omp_session_trajectory(
+        grads_np, target_np, k_max, lam=lam, eps=eps,
+        nnls_iters=nnls_iters, positive=positive, valid=valid,
+        block=block)
+
+    arrays = {
+        "indices": traj.indices,
+        "mask": traj.mask,
+        "weights_traj": traj.weights_traj,
+        "err_trace": traj.err_trace,
+        "target": target_np,
+    }
+    if fl_l_max is not None:
+        arrays["fl_l_max"] = np.asarray([fl_l_max], np.float32)
+    meta = {
+        "n": int(n), "d": int(d), "k_max": k_max, "block": int(block),
+        "lam": float(lam), "eps": float(eps),
+        "nnls_iters": int(nnls_iters), "positive": bool(positive),
+    }
+    ident = store.put(key, arrays, meta, crash=crash)
+    return key, ident

@@ -126,9 +126,22 @@ def save_checkpoint(directory: str, step: int, tree: Any,
 
 
 def _gc(directory: str, keep: int) -> None:
+    """Prune to the newest ``keep`` *intact* checkpoints.
+
+    A ``step_`` dir without its manifest is a partial write (a kill
+    after the rename of a dir that never finished filling, or a botched
+    manual copy) — it can never be restored, so it is swept as an orphan
+    rather than counted toward keep-K.  Counting it would silently
+    shrink the real retention: ``keep=2`` with one orphan would leave
+    only one restorable checkpoint.
+    """
     steps = sorted(
         d for d in os.listdir(directory) if d.startswith("step_"))
-    for d in steps[:-keep] if keep > 0 else []:
+    intact = [d for d in steps
+              if os.path.exists(os.path.join(directory, d, "manifest.json"))]
+    orphans = [d for d in steps if d not in intact]
+    doomed = orphans + (intact[:-keep] if keep > 0 else [])
+    for d in doomed:
         shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
     # stale tmp dirs from crashed writers
     for d in os.listdir(directory):
@@ -136,13 +149,21 @@ def _gc(directory: str, keep: int) -> None:
             shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
 
 
-def latest_step(directory: str) -> Optional[int]:
+def intact_steps(directory: str) -> list[int]:
+    """Step numbers with a manifest on disk, ascending.  Intact here
+    means "the atomic rename completed" — array contents may still be
+    unreadable (bit rot), which only ``load_checkpoint`` can discover."""
     if not os.path.isdir(directory):
-        return None
-    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
-             if d.startswith("step_")
-             and os.path.exists(os.path.join(directory, d, "manifest.json"))]
-    return max(steps) if steps else None
+        return []
+    return sorted(
+        int(d.split("_")[1]) for d in os.listdir(directory)
+        if d.startswith("step_")
+        and os.path.exists(os.path.join(directory, d, "manifest.json")))
+
+
+def latest_step(directory: str) -> Optional[int]:
+    steps = intact_steps(directory)
+    return steps[-1] if steps else None
 
 
 def load_checkpoint(directory: str, step: Optional[int] = None) -> dict:

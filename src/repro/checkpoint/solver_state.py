@@ -20,7 +20,7 @@ from __future__ import annotations
 
 from typing import Any, Optional
 
-from repro.checkpoint.checkpoint import (latest_step, load_checkpoint,
+from repro.checkpoint.checkpoint import (intact_steps, load_checkpoint,
                                          save_checkpoint)
 
 
@@ -31,8 +31,17 @@ def save_solver_state(directory: str, step: int, tree: Any,
 
 
 def load_solver_state(directory: str) -> Optional[dict]:
-    """Latest solver snapshot under ``directory``, or ``None`` if absent."""
-    step = latest_step(directory)
-    if step is None:
-        return None
-    return load_checkpoint(directory, step)
+    """Newest *loadable* solver snapshot under ``directory``, or None.
+
+    Newest-first with fallback: a step dir whose manifest survived but
+    whose arrays did not (bit rot, torn npz, emptied dir) must not sink
+    the resume — keep-2 retention exists precisely so the previous
+    intact step can take over.  Only when no retained step loads does
+    this report "nothing to resume" (the caller starts fresh, which is
+    always correct, just slower)."""
+    for step in reversed(intact_steps(directory)):
+        try:
+            return load_checkpoint(directory, step)
+        except Exception:
+            continue
+    return None

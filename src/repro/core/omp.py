@@ -586,6 +586,70 @@ def session_prefix_result(sess: OMPAnytimeState, k: int
     return (sess.indices[:k], sess.weights[:k], sess.mask[:k], sess.err)
 
 
+class OMPTrajectory(NamedTuple):
+    """Host-side record of a full anytime solve to ``k_max`` — the payload
+    the artifact store persists (``repro.artifacts``, DESIGN.md §12).
+
+    ``weights_traj`` is lower-triangular: row ``t-1`` holds the NNLS
+    weights *after round t* (entries ``>= t`` are zero), so slicing
+    ``(indices[:k], weights_traj[k-1, :k], mask[:k], err_trace[k-1])``
+    reproduces the session engine's answer at budget ``k`` bit-exactly.
+    """
+
+    indices: np.ndarray       # (k_max,) int32
+    mask: np.ndarray          # (k_max,) bool
+    weights_traj: np.ndarray  # (k_max, k_max) f32, row t-1 = after round t
+    err_trace: np.ndarray     # (k_max,) f32, Err_lambda after round t
+
+
+def omp_session_trajectory(
+    grads: jax.Array,
+    target: jax.Array,
+    k_max: int,
+    lam: float = 0.5,
+    eps: float = 1e-10,
+    nnls_iters: int = 50,
+    positive: bool = True,
+    valid: jax.Array | None = None,
+    block: int = 128,
+) -> tuple[OMPAnytimeState, OMPTrajectory]:
+    """Solve to ``k_max`` one round at a time, recording every prefix.
+
+    Because the session engine's prefix-width schedule is independent of
+    the budget asked for (full block multiples — see ``OMPAnytimeState``),
+    extending round-by-round is bit-identical to extending straight to
+    ``k_max``: row ``t-1`` of the trajectory equals what a fresh
+    ``omp_session_start(grads, target, t)`` reports, and the recorded
+    indices/mask match a one-shot ``omp_select(t)`` prefix exactly.  This
+    is the offline builder's path (one solve, every budget served), not a
+    hot path — the per-round host round-trip is the cost of recording.
+
+    Inputs are handed to the session engine *unconverted*: bit-exactness
+    between the recorded trajectory and a later live solve holds when
+    the live call sees the same arrays (host/device placement included)
+    — the differential gate and the serve fast path both arrange that.
+    """
+    k_max = int(k_max)
+    if k_max < 1:
+        raise ValueError(f"k_max must be >= 1, got {k_max}")
+    sess = omp_session_start(grads, target, 0, lam=lam, eps=eps,
+                             nnls_iters=nnls_iters, positive=positive,
+                             valid=valid, block=block)
+    weights_traj = np.zeros((k_max, k_max), np.float32)
+    err_trace = np.zeros((k_max,), np.float32)
+    for t in range(1, k_max + 1):
+        sess = omp_session_extend(grads, sess, t)
+        weights_traj[t - 1, :t] = np.asarray(sess.weights, np.float32)
+        err_trace[t - 1] = np.float32(sess.err)
+    traj = OMPTrajectory(
+        indices=np.asarray(sess.indices, np.int32),
+        mask=np.asarray(sess.mask, bool),
+        weights_traj=weights_traj,
+        err_trace=err_trace,
+    )
+    return sess, traj
+
+
 # ---------------------------------------------------------------------------
 # batched multi-target OMP: one pool scan serves B concurrent targets
 # ---------------------------------------------------------------------------

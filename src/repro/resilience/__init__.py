@@ -10,7 +10,9 @@ supplies both halves of that story:
 
 * **Injection** (``faults``): seeded, deterministic wrappers that make a
   chunk factory or ``row_fetch`` misbehave on a reproducible schedule —
-  the test substrate for every recovery path.
+  the test substrate for every recovery path — plus seeded *disk* faults
+  (torn writes, bit flips, truncated manifests, kills mid-commit,
+  version skew) for the artifact store (DESIGN.md §12).
 * **Recovery** (``recovery``): the bounded-retry / exponential-backoff
   policy shared by the streaming engine and the serve tier, with an
   injectable sleeper so tests never actually wait.
@@ -27,19 +29,22 @@ supplies both halves of that story:
 from repro.resilience.circuit import BreakerBoard, CircuitBreaker, CircuitOpen
 from repro.resilience.degrade import (DEGRADE_LEVELS, DeadlineExceeded,
                                       stochastic_fallback)
-from repro.resilience.faults import (ChunkReadError, CorruptChunkError,
-                                     FaultError, FaultPlan,
-                                     FaultyChunkIterator, RowFetchError,
+from repro.resilience.faults import (DISK_FAULT_KINDS, ChunkReadError,
+                                     CorruptChunkError, FaultError,
+                                     FaultPlan, FaultyChunkIterator,
+                                     RowFetchError, SimulatedCrash,
                                      StreamDied, TransientFault,
-                                     faulty_row_fetch)
+                                     crash_after, faulty_row_fetch,
+                                     inject_disk_fault)
 from repro.resilience.recovery import (RetryExhausted, RetryPolicy,
                                        with_retries)
 
 __all__ = [
     "BreakerBoard", "CircuitBreaker", "CircuitOpen",
     "DEGRADE_LEVELS", "DeadlineExceeded", "stochastic_fallback",
-    "ChunkReadError", "CorruptChunkError", "FaultError", "FaultPlan",
-    "FaultyChunkIterator", "RowFetchError", "StreamDied", "TransientFault",
-    "faulty_row_fetch",
+    "ChunkReadError", "CorruptChunkError", "DISK_FAULT_KINDS", "FaultError",
+    "FaultPlan", "FaultyChunkIterator", "RowFetchError", "SimulatedCrash",
+    "StreamDied", "TransientFault", "crash_after", "faulty_row_fetch",
+    "inject_disk_fault",
     "RetryExhausted", "RetryPolicy", "with_retries",
 ]

@@ -6,6 +6,14 @@ answers instead of failing outright.  Every rung is *labelled* on the
 ticket (``Ticket.degradation``), because the one unforgivable outcome is
 passing a weaker answer off as certified:
 
+``artifact``        a verified offline artifact slice (DESIGN.md §12):
+                    indices/mask bit-exact to the live ``omp_select`` at
+                    the requested k, weights bit-exact to the anytime
+                    session engine, served off the drain path in O(1).
+                    Above ``certified`` in the ladder because it answers
+                    without touching the pool at all; every blob was
+                    SHA-256 + norm-sidecar verified on load, and any
+                    verification failure falls through to ``certified``.
 ``certified``       the real thing: streaming solve, certificate ladder
                     intact (also covers in-memory batched solves).
 ``resumed``         certified solve completed by resuming from the
@@ -43,7 +51,7 @@ class DeadlineExceeded(RuntimeError):
     """The request's deadline expired before a solve could start."""
 
 
-DEGRADE_LEVELS = ("certified", "resumed", "prefix-shared",
+DEGRADE_LEVELS = ("artifact", "certified", "resumed", "prefix-shared",
                   "anytime-prefix", "stochastic", "shed", "timeout",
                   "failed")
 

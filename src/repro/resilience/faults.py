@@ -71,7 +71,18 @@ class StreamDied(FaultError):
     """Permanent mid-pass stream death — retries cannot help."""
 
 
-_KIND = {"io": 1, "corrupt": 2, "slow": 3, "row_io": 4, "row_corrupt": 5}
+class SimulatedCrash(FaultError):
+    """Raised by ``crash_after`` hooks to model a kill mid-commit.
+
+    The artifact store's ``put`` forwards named stages to the hook; the
+    stage it raises at decides what half-written state is left on disk
+    (see ``repro.artifacts.store.CRASH_STAGES``).  Never retried — the
+    point is what the *next* process finds.
+    """
+
+
+_KIND = {"io": 1, "corrupt": 2, "slow": 3, "row_io": 4, "row_corrupt": 5,
+         "disk": 6}
 
 
 def _draw(seed: int, kind: str, *coords: int) -> float:
@@ -214,3 +225,103 @@ def faulty_row_fetch(inner: Callable, plan: FaultPlan,
 
     fetch.injected = counts
     return fetch
+
+
+# ---------------------------------------------------------------------------
+# disk faults: the artifact store's adversary (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+# Every way the fault suite knows how to corrupt a committed artifact.
+# The differential guarantee is quantified over this set: for each kind,
+# the store must either serve a verified artifact or report a miss —
+# never a corrupt result.
+DISK_FAULT_KINDS = (
+    "torn-write",          # a blob truncated at a seeded byte offset
+    "bit-flip",            # one seeded bit flipped inside a blob
+    "truncated-manifest",  # the manifest cut off at a seeded offset
+    "kill-between-rename", # blobs committed, manifest never renamed in
+    "stale-version",       # valid manifest from an old schema version
+)
+
+
+def crash_after(stage: str) -> Callable[[str], None]:
+    """Hook for ``ArtifactStore.put(..., crash=...)``: raise
+    ``SimulatedCrash`` when the commit reaches ``stage`` (one of
+    ``repro.artifacts.store.CRASH_STAGES``), leaving the store exactly as
+    a kill at that point would."""
+
+    def hook(at: str) -> None:
+        if at == stage:
+            raise SimulatedCrash(f"simulated kill at commit stage {at!r}")
+
+    return hook
+
+
+def inject_disk_fault(store, ident: str, kind: str, seed: int = 0) -> dict:
+    """Corrupt the *committed* artifact ``ident`` in ``store`` in place.
+
+    Pure function of ``(seed, kind, ident)``: which blob, which byte, and
+    which bit are seeded draws, so two runs of a fault test mutate the
+    same bytes.  Returns a description of what was done (for assertion
+    messages).  ``store`` is an ``ArtifactStore``; imported lazily so
+    this module keeps zero dependency on the artifacts package.
+    """
+    import json
+
+    if kind not in DISK_FAULT_KINDS:
+        raise ValueError(f"unknown disk fault kind {kind!r}; "
+                         f"known: {DISK_FAULT_KINDS}")
+    man_path = store.manifest_path(ident)
+    with open(man_path) as f:
+        manifest = json.load(f)
+    # Stable coordinate stream per (seed, kind, ident).
+    rng = np.random.default_rng(
+        (int(seed), _KIND["disk"], DISK_FAULT_KINDS.index(kind),
+         int(ident[:8], 16)))
+
+    if kind in ("torn-write", "bit-flip"):
+        blobs = sorted(manifest["blobs"].items())
+        name, spec = blobs[int(rng.integers(len(blobs)))]
+        path = store.object_path(spec["sha256"])
+        size = spec["nbytes"]
+        if kind == "torn-write":
+            cut = int(rng.integers(max(size - 1, 1)))
+            with open(path, "rb+") as f:
+                f.truncate(cut)
+            return {"kind": kind, "blob": name, "cut_at": cut}
+        byte = int(rng.integers(size))
+        bit = int(rng.integers(8))
+        with open(path, "rb+") as f:
+            f.seek(byte)
+            (old,) = f.read(1)
+            f.seek(byte)
+            f.write(bytes([old ^ (1 << bit)]))
+        return {"kind": kind, "blob": name, "byte": byte, "bit": bit}
+
+    if kind == "truncated-manifest":
+        size = max(store_manifest_size(store, ident), 2)
+        cut = int(rng.integers(1, size))
+        with open(man_path, "rb+") as f:
+            f.truncate(cut)
+        return {"kind": kind, "cut_at": cut}
+
+    if kind == "kill-between-rename":
+        # The on-disk state a kill between the blob renames and the
+        # manifest rename leaves: objects present, manifest absent.
+        import os
+        os.unlink(man_path)
+        return {"kind": kind}
+
+    # stale-version: a *self-consistent* manifest (valid checksum) whose
+    # schema the reader does not speak — version skew, not bit rot.
+    from repro.artifacts.store import manifest_self_sha
+    manifest["schema"] = 0
+    manifest["manifest_sha"] = manifest_self_sha(manifest)
+    with open(man_path, "w") as f:
+        json.dump(manifest, f, sort_keys=True)
+    return {"kind": kind, "schema": 0}
+
+
+def store_manifest_size(store, ident: str) -> int:
+    import os
+    return os.path.getsize(store.manifest_path(ident))

@@ -37,6 +37,7 @@ from typing import Callable, Iterator, Optional
 import jax.numpy as jnp
 import numpy as np
 
+from repro.artifacts.store import content_digest_array
 from repro.core import greedy as greedy_lib
 from repro.core import streaming as stream_lib
 from repro.resilience.faults import TransientFault
@@ -53,6 +54,9 @@ def _fingerprint_array(x: np.ndarray, sample_rows: int = 64) -> str:
     just a head slice) catch the common "same head, different tail" case.
     Collisions only cost a spurious dedupe of byte-identical samples —
     acceptable for a cache key, and ``register(pool_id=...)`` overrides.
+    **Never** an artifact key: two pools differing outside the sampled
+    rows must not share a durable artifact, so those are keyed by the
+    full-content ``PoolEntry.content_digest`` instead.
     """
     h = hashlib.sha1()
     h.update(repr((x.shape, str(x.dtype))).encode())
@@ -81,6 +85,11 @@ class PoolEntry:
     n: int
     d: int
     fingerprint: str
+    # Full-content SHA-256 over every pool byte + the validity mask —
+    # the *artifact* key (``fingerprint`` above samples 64 rows and is
+    # only a dedupe heuristic).  None for chunked pools, which have no
+    # artifact fast path.
+    content_digest: Optional[str] = None
     grads: Optional[jnp.ndarray] = None          # array pools, (n, d) f32
     chunk_iter: Optional[Callable] = None        # chunked pools: factory
     valid: Optional[jnp.ndarray] = None          # (n,) bool or None
@@ -172,13 +181,28 @@ def _warm_steps(entry: PoolEntry, chunk_iter: Callable,
 
 
 class PoolRegistry:
-    """Admit pools once; hand out cached entries by ``pool_id``."""
+    """Admit pools once; hand out cached entries by ``pool_id``.
 
-    def __init__(self, max_pools: int = 8):
+    With ``artifacts`` (an ``repro.artifacts.ArtifactStore``), array
+    pools additionally get the offline fast path (DESIGN.md §12):
+    ``artifact_lookup`` answers a (pool, params, target) ask from a
+    *verified* precomputed trajectory, memoizing each verified artifact
+    in memory so repeat hits are a dict probe + slice — O(1), no disk,
+    no pool scan.  Verification failures quarantine on the spot and
+    report a miss (the scheduler falls through to the live solver).
+    """
+
+    def __init__(self, max_pools: int = 8, artifacts=None):
         self.max_pools = int(max_pools)
+        self.artifacts = artifacts
         self._pools: OrderedDict[str, PoolEntry] = OrderedDict()
         self._by_fp: dict[str, str] = {}
         self.evictions = 0
+        # ident -> verified SelectionArtifact; idents never verify twice.
+        self._art_memo: dict[str, object] = {}
+        self.art_hits = 0
+        self.art_misses = 0
+        self.art_quarantined = 0
 
     # -- admission -----------------------------------------------------------
     def register(self, pool, pool_id: Optional[str] = None,
@@ -204,7 +228,8 @@ class PoolRegistry:
         gv = g if v is None else g * v[:, None].astype(g.dtype)
         entry = PoolEntry(
             pool_id=pid, kind="array", n=x.shape[0], d=x.shape[1],
-            fingerprint=fp, grads=g, valid=v,
+            fingerprint=fp, content_digest=content_digest_array(x, valid),
+            grads=g, valid=v,
             target_sum=jnp.sum(gv, axis=0), partitions=int(partitions),
         )
         self._admit(pid, fp, entry)
@@ -334,6 +359,48 @@ class PoolRegistry:
             self._by_fp.pop(old.fingerprint, None)
             self.evictions += 1
 
+    # -- artifact fast path (DESIGN.md §12) ----------------------------------
+    def artifact_lookup(self, entry: PoolEntry, k: int, lam: float,
+                        eps: float, positive: bool, target):
+        """Verified artifact covering this ask, or None (fall through).
+
+        Misses are *not* negative-cached: an offline builder may commit
+        the artifact at any time, and a clean miss is one ``exists``
+        probe.  Hits are memoized by manifest ident, so the per-request
+        cost after first verification is a dict probe.  A quarantine
+        bumps the counter and leaves the store with the manifest moved
+        aside — the next probe is a clean miss.
+        """
+        if self.artifacts is None or entry.content_digest is None:
+            return None
+        from repro.artifacts import artifact_key_for
+
+        key = artifact_key_for(None, np.asarray(target, np.float32),
+                               lam, eps, positive,
+                               fingerprint=entry.content_digest)
+        ident = key.ident()
+        art = self._art_memo.get(ident)
+        if art is None:
+            before = self.artifacts.quarantined
+            art = self.artifacts.get(key)
+            self.art_quarantined += self.artifacts.quarantined - before
+            if art is None:
+                self.art_misses += 1
+                return None
+            if art.n != entry.n or art.d != entry.d:
+                # A full-content digest collision would be required to
+                # get here; treat it as corruption all the same.
+                self.artifacts.quarantine(ident, "dims-disagree-with-pool")
+                self.art_quarantined += 1
+                self.art_misses += 1
+                return None
+            self._art_memo[ident] = art
+        if int(k) > art.k_max:
+            self.art_misses += 1
+            return None
+        self.art_hits += 1
+        return art
+
     # -- lookup --------------------------------------------------------------
     def peek(self, pool_id: str) -> Optional[PoolEntry]:
         """Entry or None, without touching LRU order — the scheduler's
@@ -360,6 +427,9 @@ class PoolRegistry:
             "pools": len(self._pools),
             "warming": len(self.warming()),
             "evictions": self.evictions,
+            "artifact_hits": self.art_hits,
+            "artifact_misses": self.art_misses,
+            "artifact_quarantined": self.art_quarantined,
             "resident_bytes": sum(
                 e.n * e.d * 4 for e in self._pools.values()
                 if e.kind == "array"),

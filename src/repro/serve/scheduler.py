@@ -209,6 +209,9 @@ class RequestScheduler:
         # this request would only queue behind a poisoned pool.
         self.breakers.get(req.pool_id).peek()    # raises CircuitOpen
         cost = estimate_cost(entry.n, entry.d, req.k)
+        art_ticket = self._try_artifact(req, entry, cost)
+        if art_ticket is not None:
+            return art_ticket
         if self.overload is not None:
             self.overload.observe(len(self._queue))
             if self.overload.should_shed(req.priority):
@@ -230,6 +233,53 @@ class RequestScheduler:
         ticket = Ticket(ticket_id=f"req-{next(self._ids)}", request=req,
                         cost=cost, submitted_at=self._clock())
         self._queue.append(ticket)
+        return ticket
+
+    def _try_artifact(self, req: SelectRequest, entry: PoolEntry,
+                      cost: float) -> Optional[Ticket]:
+        """Answer a gradmatch ask from a verified offline artifact.
+
+        Served *at submit*, off the drain path entirely: a hit is a dict
+        probe plus an O(k) slice of the memoized trajectory — no queue
+        slot, no admission charge, no pool scan — returned as a terminal
+        ticket labelled ``degradation="artifact"``.  The served answer is
+        bit-exact (indices, mask, normalized weights, err) to the live
+        anytime session engine at this k, and index-identical to the
+        one-shot ``omp_select`` wherever the two live paths agree — at
+        very large pools their different padded solve widths can flip
+        near-tie argmaxes, in which case the artifact sides with the
+        session engine and matches the certified batched path at the
+        objective level (DESIGN.md §12, parity_gate check 8).  Any miss,
+        verification failure, or uncovered ask returns None and the
+        request proceeds through the ordinary (live, certified) path —
+        fail closed, never a corrupt result.
+
+        Accounting mirrors shed tickets: ``admitted`` and ``completed``
+        both count it, the tenant is never charged (nothing was queued),
+        preserving ``admitted == completed + shed + failed + pending``.
+        """
+        if (req.strategy != "gradmatch" or req.valid is not None
+                or not entry.batchable):
+            return None
+        target = (entry.target_sum if req.target is None else req.target)
+        try:
+            art = self.registry.artifact_lookup(
+                entry, req.k, req.lam, req.eps, req.positive, target)
+        except Exception:
+            return None                  # lookup must never fail a submit
+        if art is None:
+            return None
+        idx, w, mask, err = art.slice(req.k)
+        w = jnp.asarray(w)
+        mask_j = jnp.asarray(mask)
+        ticket = Ticket(ticket_id=f"req-{next(self._ids)}", request=req,
+                        cost=cost, submitted_at=self._clock())
+        ticket.result = SelectionResult(
+            jnp.asarray(idx), _normalize(w, mask_j), mask_j,
+            jnp.asarray(err))
+        self._served(ticket, "artifact")
+        self.counters["admitted"] += 1
+        self.counters["completed"] += 1
         return ticket
 
     def pending(self) -> int:

@@ -62,8 +62,18 @@ class SelectionService:
         brownout_at: float = 0.5,
         overload_at: float = 0.85,
         recover_at: float = 0.25,
+        artifact_store=None,
     ):
-        self.registry = PoolRegistry(max_pools=max_pools)
+        # ``artifact_store`` (repro.artifacts.ArtifactStore or a path to
+        # one) turns on the offline fast path: gradmatch submits against
+        # array pools are answered from verified precomputed trajectories
+        # at submit time, rung "artifact" (DESIGN.md §12).
+        if isinstance(artifact_store, (str, bytes)):
+            from repro.artifacts import ArtifactStore
+            artifact_store = ArtifactStore(artifact_store)
+        self.artifacts = artifact_store
+        self.registry = PoolRegistry(max_pools=max_pools,
+                                     artifacts=artifact_store)
         self.admission = AdmissionController(
             max_queue=max_queue,
             default_budget_units=default_budget_units,
@@ -294,7 +304,9 @@ class SelectionService:
                 "sessions": self.sessions.stats(),
                 "streams": self.streams.stats(),
                 "tenants": self.admission.stats(),
-                "breakers": self.breakers.stats()}
+                "breakers": self.breakers.stats(),
+                "artifacts": (None if self.artifacts is None
+                              else self.artifacts.stats())}
 
 
 __all__ = ["SelectionService", "SelectRequest", "Ticket", "SessionGone",

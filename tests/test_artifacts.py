@@ -1,0 +1,374 @@
+"""Durable selection-artifact store (DESIGN.md §12).
+
+Three families of claims, all seeded (``FAULT_SEED`` parametrizes the
+disk-fault schedule the same way CI's fault-suite job does for the
+transient-fault tests):
+
+1. **Differential guarantee**: an artifact round-trips through disk and
+   serves answers bit-identical to the live solvers at *every*
+   ``k <= k_max`` — indices/mask equal to the one-shot ``omp_select``
+   and the anytime session engine, weights bit-equal to the session
+   engine (the recorded path), allclose to the one-shot.
+2. **Fail closed under every disk fault**: for each
+   ``DISK_FAULT_KINDS`` member and each ``CRASH_STAGES`` kill point, a
+   read either returns a fully verified artifact or a miss (with the
+   corrupt manifest quarantined) — never bytes that decode to a wrong
+   answer.  End to end, the service then serves the same request off
+   the live ladder instead.
+3. **GC safety**: mark-then-sweep never collects a referenced blob,
+   always collects unreferenced debris past the grace window, and a
+   swept store still verifies.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.artifacts import (SCHEMA_VERSION, ArtifactStore,
+                             artifact_key_for, build_artifact,
+                             content_digest_array)
+from repro.artifacts.store import manifest_self_sha
+from repro.core.gradmatch import _normalize
+from repro.core.omp import omp_select, omp_session_start
+from repro.resilience import (DISK_FAULT_KINDS, SimulatedCrash,
+                              crash_after, inject_disk_fault)
+from repro.serve.service import SelectionService
+
+SEED = int(os.environ.get("FAULT_SEED", "7"))
+
+N, D, K_MAX = 256, 24, 24
+
+
+def _pool(seed=0, n=N, d=D):
+    return np.asarray(
+        jax.random.normal(jax.random.PRNGKey(seed), (n, d)), np.float32)
+
+
+def _target(g):
+    return np.asarray(jnp.sum(jnp.asarray(g), axis=0), np.float32)
+
+
+@pytest.fixture()
+def store(tmp_path):
+    return ArtifactStore(str(tmp_path / "store"))
+
+
+@pytest.fixture()
+def built(store):
+    g = _pool(SEED)
+    tgt = _target(g)
+    key, ident = build_artifact(store, g, tgt, K_MAX)
+    return store, g, tgt, key, ident
+
+
+# -- differential guarantee ---------------------------------------------------
+
+def test_roundtrip_bit_exact_at_every_k(built):
+    store, g, tgt, key, _ = built
+    art = store.get(key)
+    assert art is not None and art.k_max == K_MAX
+    for k in range(1, K_MAX + 1):
+        idx, w, mask, err = art.slice(k)
+        li, lw, lm, le = omp_select(g, tgt, k)
+        sess = omp_session_start(g, tgt, k)
+        assert np.array_equal(idx, np.asarray(li)), k
+        assert np.array_equal(mask, np.asarray(lm)), k
+        assert np.array_equal(idx, np.asarray(sess.indices)), k
+        assert np.array_equal(w, np.asarray(sess.weights)), k
+        assert np.allclose(w, np.asarray(lw), rtol=1e-4, atol=1e-5), k
+        assert np.array_equal(err, np.float32(np.asarray(sess.err))), k
+
+
+def test_slice_bounds(built):
+    store, _, _, key, _ = built
+    art = store.get(key)
+    for bad in (0, -1, K_MAX + 1):
+        with pytest.raises(ValueError):
+            art.slice(bad)
+
+
+def test_key_isolation_full_content_digest(store):
+    """S1: the artifact key hashes *every* byte.  Two pools identical in
+    the registry's sampled fingerprint rows but differing in one
+    unsampled element must produce distinct artifacts."""
+    g1 = _pool(SEED)
+    g2 = g1.copy()
+    g2[1, 0] += 1.0          # row 1 is unsampled at 64-row stride over 256
+    from repro.serve.registry import _fingerprint_array
+    assert _fingerprint_array(g1) == _fingerprint_array(g2)
+    assert content_digest_array(g1) != content_digest_array(g2)
+    t1, t2 = _target(g1), _target(g2)
+    k1, _ = build_artifact(store, g1, t1, 4)
+    k2, _ = build_artifact(store, g2, t2, 4)
+    assert k1.ident() != k2.ident()
+    a1, a2 = store.get(k1), store.get(k2)
+    assert not np.array_equal(a1.arrays["weights_traj"],
+                              a2.arrays["weights_traj"])
+
+
+def test_key_sensitivity(built):
+    store, g, tgt, key, _ = built
+    assert store.get(artifact_key_for(g, tgt, 0.25, 1e-10, True)) is None
+    assert store.get(artifact_key_for(g, tgt, 0.5, 1e-10, False)) is None
+    assert store.get(
+        artifact_key_for(g, tgt + np.float32(1), 0.5, 1e-10, True)) is None
+
+
+# -- fail-closed under disk faults --------------------------------------------
+
+@pytest.mark.parametrize("kind", DISK_FAULT_KINDS)
+def test_disk_fault_fail_closed(built, kind):
+    store, g, tgt, key, ident = built
+    info = inject_disk_fault(store, ident, kind, seed=SEED)
+    assert info["kind"] == kind
+    art = store.get(key)
+    # Either the fault left the artifact fully verifiable (possible only
+    # for kinds that touch an unluckily-unused byte — not these), or the
+    # read is a clean miss; corrupt bytes are never served.
+    assert art is None
+    if kind != "kill-between-rename":        # manifest gone entirely
+        assert not os.path.exists(store.manifest_path(ident))
+    assert store.quarantined >= (0 if kind == "kill-between-rename" else 1)
+    # The store stays usable: a rebuild recommits and serves again.
+    key2, ident2 = build_artifact(store, g, tgt, K_MAX)
+    assert ident2 == ident
+    art = store.get(key2)
+    assert art is not None
+    idx, w, _, _ = art.slice(K_MAX)
+    sess = omp_session_start(g, tgt, K_MAX)
+    assert np.array_equal(idx, np.asarray(sess.indices))
+    assert np.array_equal(w, np.asarray(sess.weights))
+
+
+@pytest.mark.parametrize("kind", DISK_FAULT_KINDS)
+def test_disk_fault_deterministic(built, kind):
+    """Same (seed, kind, ident) -> same mutation.  The store is healed
+    by a recommit between injections (put verifies resident blobs on
+    collision), so both calls act on byte-identical state."""
+    store, g, tgt, _, ident = built
+    a = inject_disk_fault(store, ident, kind, seed=SEED)
+    build_artifact(store, g, tgt, K_MAX)     # heal: recommit in place
+    b = inject_disk_fault(store, ident, kind, seed=SEED)
+    assert a == b
+
+
+@pytest.mark.parametrize("stage", ["pre-blob", "between-rename"])
+def test_crash_during_put_not_servable(store, stage):
+    g = _pool(SEED)
+    tgt = _target(g)
+    with pytest.raises(SimulatedCrash):
+        build_artifact(store, g, tgt, 6, crash=crash_after(stage))
+    key = artifact_key_for(g, tgt, 0.5, 1e-10, True)
+    assert store.get(key) is None            # miss, not corruption
+    # and the interrupted commit can simply be retried
+    key2, _ = build_artifact(store, g, tgt, 6)
+    assert store.get(key2) is not None
+
+
+def test_crash_post_commit_is_servable(store):
+    g = _pool(SEED)
+    tgt = _target(g)
+    with pytest.raises(SimulatedCrash):
+        build_artifact(store, g, tgt, 6,
+                       crash=crash_after("post-commit"))
+    key = artifact_key_for(g, tgt, 0.5, 1e-10, True)
+    art = store.get(key)                     # rename completed: durable
+    assert art is not None and art.k_max == 6
+
+
+def test_stale_version_quarantined_on_read(built):
+    """A manifest whose self-checksum is *valid* but whose schema is not
+    ours must still be rejected (version skew, not bit rot)."""
+    store, _, _, key, ident = built
+    inject_disk_fault(store, ident, "stale-version", seed=SEED)
+    man = json.load(open(store.manifest_path(ident)))
+    assert man["schema"] != SCHEMA_VERSION
+    assert store.get(key) is None
+    assert os.path.exists(
+        os.path.join(store.quarantine_dir, f"{ident}.json"))
+    reason = open(
+        os.path.join(store.quarantine_dir, f"{ident}.reason")).read()
+    assert "schema" in reason
+
+
+def test_tampered_manifest_field_rejected(built):
+    """In-place edit of any manifest field breaks the self-checksum."""
+    store, _, _, key, ident = built
+    path = store.manifest_path(ident)
+    man = json.load(open(path))
+    man["meta"]["k_max"] = 999
+    with open(path, "w") as f:
+        json.dump(man, f, sort_keys=True)
+    assert store.get(key) is None
+    assert store.quarantined == 1
+
+
+def test_norm_sidecar_catches_value_swap(built):
+    """Two blobs' bytes swapped *with their hashes* still fail: the blob
+    digests verify but dtype/shape/norm expectations do not."""
+    store, _, _, key, ident = built
+    path = store.manifest_path(ident)
+    man = json.load(open(path))
+    a, b = man["blobs"]["indices"], man["blobs"]["err_trace"]
+    man["blobs"]["indices"], man["blobs"]["err_trace"] = b, a
+    man["manifest_sha"] = manifest_self_sha(man)
+    with open(path, "w") as f:
+        json.dump(man, f, sort_keys=True)
+    assert store.get(key) is None
+    assert store.quarantined == 1
+
+
+# -- GC safety ----------------------------------------------------------------
+
+def test_gc_never_collects_referenced_blobs(built):
+    store, _, _, key, _ = built
+    rep = store.gc(grace_s=0.0)
+    assert rep["objects_swept"] == 0
+    assert store.get(key) is not None
+
+
+def test_gc_sweeps_orphans_after_grace(built):
+    store, g, tgt, key, ident = built
+    # kill-between-rename: blobs committed, manifest never landed
+    with pytest.raises(SimulatedCrash):
+        build_artifact(store, _pool(SEED + 1), _target(_pool(SEED + 1)),
+                       4, crash=crash_after("between-rename"))
+    rep0 = store.gc(grace_s=3600.0)
+    assert rep0["objects_swept"] == 0        # grace window protects
+    rep = store.gc(grace_s=0.0)
+    assert rep["objects_swept"] > 0
+    assert rep["tmp_swept"] >= 1
+    assert store.get(key) is not None        # survivor still verifies
+
+
+def test_gc_ignores_unparseable_manifest(built):
+    """GC must not crash on (or mark through) a torn manifest; the
+    verifier quarantines it on the next read instead."""
+    store, _, _, key, ident = built
+    inject_disk_fault(store, ident, "truncated-manifest", seed=SEED)
+    rep = store.gc(grace_s=3600.0)
+    assert rep["marked"] == 0
+    assert store.get(key) is None            # quarantined, fail closed
+
+
+# -- serve integration --------------------------------------------------------
+
+def _service(tmp_path, g):
+    svc = SelectionService(
+        artifact_store=str(tmp_path / "store"))
+    pid = svc.register_pool(g)
+    return svc, pid
+
+
+def test_serve_hit_bit_equal_live(tmp_path):
+    """Artifact-served tickets match live-served tickets: identical
+    indices at every probed k, weights within 1 ulp.  (The live queued
+    path solves through ``omp_select_batched``, whose NNLS arithmetic
+    differs from the session engine the artifact records in the last
+    ulp; exact weight equality vs the session engine is asserted in
+    ``test_serve_weights_normalized_like_live``.)"""
+    g = _pool(SEED)
+    svc, pid = _service(tmp_path, g)
+    entry = svc.registry.get(pid)
+    tgt = np.asarray(entry.target_sum, np.float32)
+    build_artifact(svc.artifacts, g, tgt, K_MAX,
+                   fingerprint=entry.content_digest)
+    live = SelectionService()
+    live_pid = live.register_pool(g)
+    for k in (1, K_MAX // 2, K_MAX):
+        t = svc.submit(pid, k)
+        assert t.status == "done" and t.degradation == "artifact"
+        lt = live.submit(live_pid, k)
+        live.drain()
+        assert lt.status == "done" and lt.degradation != "artifact"
+        assert np.array_equal(np.asarray(t.result.indices),
+                              np.asarray(lt.result.indices))
+        assert np.allclose(np.asarray(t.result.weights),
+                           np.asarray(lt.result.weights),
+                           rtol=1e-6, atol=1e-7)
+    st = svc.stats()
+    assert st["registry"]["artifact_hits"] == 3
+    assert st["artifacts"]["loads"] == 1     # memoized after first hit
+
+
+def test_serve_miss_falls_through_live(tmp_path):
+    g = _pool(SEED)
+    svc, pid = _service(tmp_path, g)
+    entry = svc.registry.get(pid)
+    tgt = np.asarray(entry.target_sum, np.float32)
+    build_artifact(svc.artifacts, g, tgt, 8,
+                   fingerprint=entry.content_digest)
+    # k beyond coverage -> live path
+    t = svc.submit(pid, 12)
+    done = svc.drain()
+    assert t in done and t.degradation != "artifact"
+    # custom target -> different key -> live path
+    t2 = svc.submit(pid, 4, target=tgt + np.float32(1))
+    svc.drain()
+    assert t2.status == "done" and t2.degradation != "artifact"
+    # covered ask still hits
+    t3 = svc.submit(pid, 8)
+    assert t3.degradation == "artifact"
+    c = svc.scheduler.counters
+    assert c["admitted"] == (c["completed"] + c["shed"] + c["failed"]
+                             + svc.scheduler.pending())
+
+
+@pytest.mark.parametrize("kind", DISK_FAULT_KINDS)
+def test_serve_fault_falls_through_never_corrupt(tmp_path, kind):
+    """The end-to-end guarantee: under any disk fault the service
+    answers off the live ladder with the *same selection* a fault-free
+    live solve produces — the artifact tier can only ever accelerate."""
+    g = _pool(SEED)
+    svc, pid = _service(tmp_path, g)
+    entry = svc.registry.get(pid)
+    tgt = np.asarray(entry.target_sum, np.float32)
+    _, ident = build_artifact(svc.artifacts, g, tgt, K_MAX,
+                              fingerprint=entry.content_digest)
+    inject_disk_fault(svc.artifacts, ident, kind, seed=SEED)
+    t = svc.submit(pid, K_MAX)
+    if t.status != "done":
+        svc.drain()
+    assert t.status == "done"
+    assert t.degradation != "artifact"       # fell through, fail closed
+    live = SelectionService()
+    live_pid = live.register_pool(g)
+    lt = live.submit(live_pid, K_MAX)
+    live.drain()
+    assert np.array_equal(np.asarray(t.result.indices),
+                          np.asarray(lt.result.indices))
+    assert np.array_equal(np.asarray(t.result.weights),
+                          np.asarray(lt.result.weights))
+    st = svc.stats()["registry"]
+    assert st["artifact_hits"] == 0
+
+
+def test_serve_weights_normalized_like_live(tmp_path):
+    g = _pool(SEED)
+    svc, pid = _service(tmp_path, g)
+    entry = svc.registry.get(pid)
+    tgt = np.asarray(entry.target_sum, np.float32)
+    build_artifact(svc.artifacts, g, tgt, K_MAX,
+                   fingerprint=entry.content_digest)
+    t = svc.submit(pid, K_MAX)
+    sess = omp_session_start(g, tgt, K_MAX)
+    want = _normalize(jnp.asarray(np.asarray(sess.weights)),
+                      jnp.asarray(np.asarray(sess.mask)))
+    assert np.array_equal(np.asarray(t.result.weights),
+                          np.asarray(want))
+
+
+def test_chunked_pools_have_no_artifact_path(tmp_path):
+    from repro.data.loader import ChunkedPool
+    g = _pool(SEED, n=128, d=8)
+    svc = SelectionService(artifact_store=str(tmp_path / "store"))
+    pid = svc.register_chunked_pool(ChunkedPool(g, chunk_size=32))
+    entry = svc.registry.get(pid)
+    assert entry.content_digest is None
+    t = svc.submit(pid, 8)
+    svc.drain()
+    assert t.status == "done" and t.degradation != "artifact"

@@ -8,8 +8,9 @@ import numpy as np
 import pytest
 
 from repro.checkpoint import (CheckpointManager, load_checkpoint,
-                              restore_sharded, save_checkpoint)
-from repro.checkpoint.checkpoint import latest_step
+                              load_solver_state, restore_sharded,
+                              save_checkpoint, save_solver_state)
+from repro.checkpoint.checkpoint import intact_steps, latest_step
 
 
 def _tree(seed=0):
@@ -64,6 +65,56 @@ def test_crashed_tmp_ignored(tmp_path):
     # a later save GCs the stale tmp dir
     save_checkpoint(str(tmp_path), 2, _tree(2), keep=5)
     assert not any(d.startswith("tmp.") for d in os.listdir(tmp_path))
+
+
+def test_gc_sweeps_partial_step_dirs(tmp_path):
+    """A manifest-less step dir (kill-during-save debris) is swept as an
+    orphan, not counted toward keep-K — with keep=2 the two *restorable*
+    checkpoints must both survive."""
+    save_checkpoint(str(tmp_path), 1, _tree(1))
+    save_checkpoint(str(tmp_path), 2, _tree(2))
+    # Inject a partial step dir newer than both: rename happened, content
+    # never finished (no manifest).
+    partial = tmp_path / "step_0000000099"
+    os.makedirs(partial)
+    (partial / "arrays.npz").write_bytes(b"torn")
+    save_checkpoint(str(tmp_path), 3, _tree(3), keep=2)
+    steps = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    # orphan gone; the two newest intact checkpoints retained
+    assert steps == ["step_0000000002", "step_0000000003"]
+    assert intact_steps(str(tmp_path)) == [2, 3]
+    _assert_tree_equal(_tree(2), load_checkpoint(str(tmp_path), 2))
+
+
+def test_solver_state_falls_back_past_corrupt_latest(tmp_path):
+    """A corrupt newest step (manifest intact, arrays unreadable) must
+    fall back to the previous intact step — not raise, not return junk."""
+    save_solver_state(str(tmp_path), 1, {"s": np.arange(3)})
+    save_solver_state(str(tmp_path), 2, {"s": np.arange(3) * 2})
+    (tmp_path / "step_0000000002" / "arrays.npz").write_bytes(b"rotted")
+    got = load_solver_state(str(tmp_path))
+    assert got is not None
+    np.testing.assert_array_equal(got["s"], np.arange(3))
+
+
+def test_solver_state_empty_latest_step_dir(tmp_path):
+    """An emptied latest step dir (manifest deleted too) is simply not a
+    candidate; the previous step resumes."""
+    save_solver_state(str(tmp_path), 1, {"s": np.ones(2)})
+    save_solver_state(str(tmp_path), 2, {"s": np.zeros(2)})
+    d = tmp_path / "step_0000000002"
+    for f in os.listdir(d):
+        os.unlink(d / f)
+    got = load_solver_state(str(tmp_path))
+    np.testing.assert_array_equal(got["s"], np.ones(2))
+
+
+def test_solver_state_none_when_nothing_loads(tmp_path):
+    """Every retained step corrupt -> None (start fresh), never raise."""
+    assert load_solver_state(str(tmp_path)) is None        # no dir at all
+    save_solver_state(str(tmp_path), 1, {"s": np.ones(2)})
+    (tmp_path / "step_0000000001" / "arrays.npz").write_bytes(b"x")
+    assert load_solver_state(str(tmp_path)) is None
 
 
 def test_async_manager(tmp_path):
